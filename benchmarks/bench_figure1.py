@@ -1,0 +1,22 @@
+"""Paper Figure 1 / Appendix A reproduction: exact peak working-set numbers
+for the example graph, default vs optimal schedule."""
+import time
+
+from repro.core import minimise_peak_memory, profile
+from repro.graphs.figure1 import DEFAULT_PEAK, OPTIMAL_PEAK, figure1_graph
+
+
+def run(report):
+    g = figure1_graph()
+    t0 = time.perf_counter()
+    res = minimise_peak_memory(g)
+    dt = (time.perf_counter() - t0) * 1e6
+    default_peak = g.peak_usage(g.default_schedule())
+    report("figure1.default_peak_B", dt, default_peak)
+    report("figure1.optimal_peak_B", dt, res.peak)
+    assert default_peak == DEFAULT_PEAK == 5216
+    assert res.peak == OPTIMAL_PEAK == 4960
+    print(profile.usage_table(g, g.default_schedule()))
+    print()
+    print(profile.usage_table(g, res.schedule))
+    print(profile.compare(g, g.default_schedule(), res.schedule))

@@ -1,0 +1,36 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: correctness + op-level
+stats; wall-clock is meaningful only on a real TPU)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import decode_attention, flash_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def run(report):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, H, K, D = 1, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, D), jnp.float32)
+
+    t0 = time.perf_counter()
+    out = flash_attention(q, k, v, causal=True, bq=64, bk=64,
+                          interpret=True)
+    out.block_until_ready()
+    dt = (time.perf_counter() - t0) * 1e6
+    err = float(jnp.abs(out - attention_ref(q, k, v, causal=True)).max())
+    report("kernels.flash_attention.max_err", dt, err)
+
+    qd = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    lengths = jnp.asarray([S // 2], jnp.int32)
+    t0 = time.perf_counter()
+    od = decode_attention(qd, k, v, lengths, bs=64, interpret=True)
+    od.block_until_ready()
+    dt = (time.perf_counter() - t0) * 1e6
+    err = float(jnp.abs(od - decode_attention_ref(qd, k, v, lengths)).max())
+    report("kernels.decode_attention.max_err", dt, err)

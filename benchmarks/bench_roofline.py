@@ -1,0 +1,39 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (one row per
+arch × shape on the single-pod mesh).  Derived value = step-time lower
+bound in ms from the dominant term."""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def rows(mesh="single"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def run(report):
+    rs = rows()
+    if not rs:
+        print("  (no dry-run results yet — run "
+              "`python -m repro.launch.dryrun` first)")
+        return
+    for r in rs:
+        roof = r["roofline"]
+        name = f"roofline.{r['arch']}.{r['shape']}"
+        report(name, r["compile_s"] * 1e6, roof["step_time_lb_s"] * 1e3)
+    print(f"\n  {'arch':24s} {'shape':12s} {'dom':12s} "
+          f"{'comp_ms':>8s} {'mem_ms':>8s} {'coll_ms':>8s} "
+          f"{'useful%':>8s} {'HBM_GB':>7s}")
+    for r in rs:
+        roof = r["roofline"]
+        peak = r["memory_analysis"].get("peak_memory_in_bytes", 0) / 1e9
+        print(f"  {r['arch']:24s} {r['shape']:12s} "
+              f"{roof['dominant'][:-2]:12s} "
+              f"{roof['compute_s']*1e3:8.2f} {roof['memory_s']*1e3:8.2f} "
+              f"{roof['collective_s']*1e3:8.2f} "
+              f"{roof.get('useful_flop_fraction', 0)*100:8.1f} "
+              f"{peak:7.2f}")

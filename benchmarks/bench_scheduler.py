@@ -1,0 +1,54 @@
+"""Scheduler scaling: exact DP vs chain-contracted DP vs greedy vs beam —
+runtime and solution quality over random branchy DAGs (the paper reports
+O(|V|·2^|V|); this quantifies where each method stays tractable)."""
+import random
+import time
+
+from repro.core import (beam_schedule, greedy_schedule, minimise_peak_memory,
+                        minimise_peak_memory_contracted)
+from repro.core.graph import Graph
+
+
+def random_branchy(seed, n_ops, fanout=0.3):
+    rng = random.Random(seed)
+    g = Graph()
+    g.add_tensor("in", 64)
+    frontier = ["in"]
+    for k in range(n_ops):
+        out = f"a{k}"
+        g.add_tensor(out, rng.choice([16, 32, 64, 128, 256]))
+        src = rng.choice(frontier[-4:])
+        ins = [src]
+        if rng.random() < fanout and len(frontier) > 2:
+            ins.append(rng.choice(frontier))
+        g.add_operator(f"op{k}", ins, out)
+        frontier.append(out)
+    sinks = [t for t in g.tensors if not g.consumers(t) and g.producer(t)]
+    g.set_outputs(sinks)
+    return g
+
+
+def run(report):
+    for n in (8, 12, 16, 20):
+        g = random_branchy(42, n)
+        t0 = time.perf_counter()
+        exact = minimise_peak_memory(g)
+        t_exact = (time.perf_counter() - t0) * 1e6
+        report(f"scheduler.exact.n{n}", t_exact, exact.peak)
+    for n in (16, 32, 64, 128):
+        g = random_branchy(42, n)
+        ub = greedy_schedule(g).peak + 1
+        t0 = time.perf_counter()
+        c = minimise_peak_memory_contracted(g, upper_bound=ub,
+                                            max_states=100_000)
+        t_c = (time.perf_counter() - t0) * 1e6
+        report(f"scheduler.contracted.n{n}", t_c,
+               c.peak if c else -1)   # -1 = budget hit -> beam fallback
+        t0 = time.perf_counter()
+        gr = greedy_schedule(g)
+        report(f"scheduler.greedy.n{n}",
+               (time.perf_counter() - t0) * 1e6, gr.peak)
+        t0 = time.perf_counter()
+        bm = beam_schedule(g, width=32)
+        report(f"scheduler.beam32.n{n}",
+               (time.perf_counter() - t0) * 1e6, bm.peak)

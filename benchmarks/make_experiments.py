@@ -1,0 +1,206 @@
+"""Generate EXPERIMENTS.md from the dry-run / perf artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments
+
+Narrative text lives here; all numbers come from benchmarks/results/.
+"""
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DRY = os.path.join(HERE, "results", "dryrun")
+PERF = os.path.join(HERE, "results", "perf")
+OUT = os.path.join(os.path.dirname(HERE), "EXPERIMENTS.md")
+
+ARCH_ORDER = ["phi3.5-moe-42b-a6.6b", "llama3.2-3b", "internvl2-1b",
+              "qwen2-7b", "granite-moe-1b-a400m", "zamba2-2.7b",
+              "phi3-medium-14b", "whisper-large-v3", "glm4-9b", "xlstm-350m"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+FIX_HINTS = {
+    ("memory_s", "decode"): "stream the KV cache through the Pallas decode "
+        "kernel (bf16 end-to-end, no convert round-trips) and fuse the "
+        "rolling-cache update",
+    ("memory_s", "train"): "raise arithmetic intensity: larger microbatch "
+        "per device, fp8/bf16 master copies, fused optimizer update",
+    ("memory_s", "prefill"): "larger attention chunks (more reuse per HBM "
+        "read) and fused QKV projections",
+    ("collective_s", "train"): "overlap weight/expert all-gathers with "
+        "compute (async collectives) or drop FSDP re-gather via ZeRO-1",
+    ("collective_s", "prefill"): "context-parallel activations + FSDP "
+        "weight gather instead of per-layer activation all-reduce",
+    ("collective_s", "decode"): "shard the cache, not the heads; merge "
+        "partial softmaxes (flash-decoding)",
+    ("compute_s", "train"): "already compute-bound — approach MFU via "
+        "remat policy tuning",
+}
+
+
+def load(d, mesh=None, variant_none=True):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        if mesh and r["mesh"] != mesh:
+            continue
+        if variant_none and r.get("variant"):
+            continue
+        out[(r["arch"], r["shape"], r["mesh"], r.get("variant", ""))] = r
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}"
+
+
+def shape_kind(shape):
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+
+
+def main():
+    single = load(DRY, "single")
+    multi = load(DRY, "multi")
+    perf = {}
+    if os.path.isdir(PERF):
+        for f in sorted(glob.glob(os.path.join(PERF, "*.json"))):
+            r = json.load(open(f))
+            perf[(r["arch"], r["shape"], r.get("variant", ""))] = r
+
+    L = []
+    w = L.append
+    w("# EXPERIMENTS\n")
+    w("Reproduction + systems evaluation for *Neural networks on "
+      "microcontrollers: saving memory at inference via operator "
+      "reordering* (Liberis & Lane, 2019). Paper-validation numbers are "
+      "asserted in `tests/` and printed by `python -m benchmarks.run`; "
+      "this file holds the dry-run, roofline, and perf-iteration results "
+      "for the TPU-pod system built around the paper's technique.\n")
+
+    # ------------------------------------------------------ paper validation
+    w("## §Paper-validation (the faithful baseline)\n")
+    w("| paper claim | paper value | this repo | where |")
+    w("|---|---|---|---|")
+    w("| Figure 1/2: default-order peak of the example graph | 5,216 B | "
+      "**5,216 B** (bit-exact per-operator table) | "
+      "`tests/test_core_scheduler.py::test_figure1_default_order_matches_paper_figure2` |")
+    w("| Figure 3: optimal-order peak found by Algorithm 1 | 4,960 B | "
+      "**4,960 B** (schedule 1,4,6,2,3,5,7 recovered) | "
+      "`test_algorithm1_finds_paper_optimum` |")
+    w("| Table 1: SwiftNet-Cell peak, default → optimal | 351 → 301 KB "
+      "(−50 KB) | 360 → 306 KB (−54 KB) on our reconstructed cell (exact "
+      "cell graph unpublished; same shape/regime) | `benchmarks/bench_table1.py` |")
+    w("| Fits 512 KB SRAM only after reordering | ✓ | ✓ (with the paper's "
+      "≈200 KB framework overhead: 560 KB ✗ → 506 KB ✓) | "
+      "`tests/test_mcu.py::test_swiftnet_fits_only_with_optimised_order` |")
+    w("| Table 1: MobileNet-v1 static → dynamic alloc | 241 → 55 KB | "
+      "226 → **54 KB** (55,296 B peak exactly matches the paper's 55 KB) | "
+      "`tests/test_mcu.py::test_mobilenet_dynamic_vs_static_alloc` |")
+    w("| Reordering does not change outputs | ✓ | bit-identical across "
+      "schedules | `test_reordering_is_output_invariant` |")
+    w("| Defrag overhead | <1 % latency | bytes-moved accounting + <1 % "
+      "interpreter overhead on CPU timings | `bench_table1` |\n")
+    w("Two findings against the paper's own text (documented in "
+      "DESIGN.md/code):\n")
+    w("1. **Algorithm 1 double-counts multi-consumer constants** — line 18 "
+      "adds `Σ|cs|` on top of a `here`-term that may already include a "
+      "constant consumed by the candidate's producer. Found by a hypothesis "
+      "property test; fixed with set-deduplicated accounting (identical on "
+      "the paper's own graphs).")
+    w("2. **Chain contraction is not exactness-preserving**: the optimum "
+      "may interleave chains (running another chain's op mid-chain frees a "
+      "held tensor earlier). Our contracted DP is therefore labelled "
+      "near-exact and property-tested as an upper bound.\n")
+    w("Also implemented: the paper's §6 proposed extension (accumulate an "
+      "add into a dying input, eliminating its output buffer) as an "
+      "`inplace` operator attribute in the working-set model "
+      "(`test_inplace_accumulation_paper_s6_extension`).\n")
+
+    # ------------------------------------------------------------- dry-run
+    w("## §Dry-run\n")
+    w("Production mesh 16×16 (`data`,`model`) = 256 chips/pod; multi-pod "
+      "2×16×16 (`pod`,`data`,`model`) = 512 chips, forced-host-device "
+      "lowering (no allocation, inputs are ShapeDtypeStructs). Every "
+      "(architecture × applicable shape) lowers **and compiles** on both "
+      "meshes; whisper × long_500k is skipped by policy (DESIGN.md §6). "
+      "`memory_analysis()` is per-device.\n")
+    w("Counting methodology: XLA's HloCostAnalysis visits a while-loop "
+      "body once, so FLOPs/bytes/collectives are taken from a second, "
+      "scan-UNROLLED lowering (`analysis_mode=unrolled`; exact trip-count "
+      "accounting — verified against an analytic matmul count). Two known "
+      "biases, both held constant across §Perf A/Bs: (a) the CPU XLA "
+      "pipeline cannot consume bf16 in dots and inserts f32 converts a TPU "
+      "MXU would not emit, inflating the memory term; (b) elementwise/"
+      "transcendental ops count as FLOPs, so `useful_flop_fraction` "
+      "compares matmul-only MODEL_FLOPS against all-ops HLO FLOPs; "
+      "(c) the CPU pipeline *promotes bf16 collectives to f32* "
+      "(`add.clone_promoted` in the HLO), so collective terms are ≈2× "
+      "upper bounds for bf16 traffic — uniformly, on both sides of every "
+      "§Perf A/B.\n")
+    w("| arch | shape | mesh | compile_s | peak GB/dev | args GB/dev | "
+      "collectives |")
+    w("|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh, tbl in (("single", single), ("multi", multi)):
+                r = tbl.get((arch, shape, mesh, ""))
+                if r is None:
+                    continue
+                ma = r["memory_analysis"]
+                w(f"| {arch} | {shape} | {mesh} | {r['compile_s']:.0f} | "
+                  f"{fmt_bytes(ma.get('peak_memory_in_bytes', 0))} | "
+                  f"{fmt_bytes(ma.get('argument_size_in_bytes', 0))} | "
+                  f"{r['collectives']['total'] / 1e6:.0f} MB |")
+    n_s = len([1 for k in single if not k[3]])
+    n_m = len([1 for k in multi if not k[3]])
+    w(f"\nAll {n_s} single-pod and {n_m} multi-pod combinations lowered and "
+      "compiled without error (the multi-pod pass proves the `pod` axis "
+      "shards; roofline below is single-pod per the assignment).\n")
+
+    # ------------------------------------------------------------ roofline
+    w("## §Roofline (single pod, 256 × TPU v5e)\n")
+    w("Constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI per link. "
+      "All three terms are seconds per step from per-device quantities "
+      "(the SPMD-partitioned module *is* the per-device program, so the "
+      "formula's ÷chips is the partitioning itself). MODEL_FLOPS = "
+      "6·N·D (train) / 2·N·D (inference), N = active params (MoE: top-k "
+      "slice).\n")
+    w("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+      "MODEL_FLOPS/HLO | what moves the dominant term |")
+    w("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = single.get((arch, shape, "single", ""))
+            if r is None:
+                continue
+            ro = r["roofline"]
+            hint = FIX_HINTS.get((ro["dominant"], shape_kind(shape)), "—")
+            w(f"| {arch} | {shape} | {ro['compute_s']:.3f} | "
+              f"{ro['memory_s']:.3f} | {ro['collective_s']:.3f} | "
+              f"**{ro['dominant'][:-2]}** | "
+              f"{ro.get('useful_flop_fraction', 0):.3f} | {hint} |")
+    w("")
+
+    # ---------------------------------------------------------------- perf
+    w("## §Perf — hillclimbing log\n")
+    if perf:
+        w("A/B artifact summary (all unrolled-analysis, single pod, per "
+          "device; rows pair with the narrative below):\n")
+        w("| arch × shape | variant | peak GB | coll GB | mem_s | coll_s |")
+        w("|---|---|---|---|---|---|")
+        for (arch, shape, var), r in sorted(perf.items()):
+            ro, ma = r["roofline"], r["memory_analysis"]
+            w(f"| {arch} × {shape} | {var or 'optimised-default'} | "
+              f"{ma.get('peak_memory_in_bytes', 0)/1e9:.2f} | "
+              f"{r['collectives']['total']/1e9:.1f} | "
+              f"{ro['memory_s']:.3f} | {ro['collective_s']:.3f} |")
+        w("")
+    w(open(os.path.join(HERE, "perf_log.md")).read())
+
+    with open(OUT, "w") as f:
+        f.write("\n".join(L))
+    print(f"wrote {OUT} ({len(L)} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows, then the §Roofline aggregation from the dry-run artifacts.
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_figure1, bench_table1, bench_scheduler,
+                   bench_jaxpr, bench_kernels, bench_roofline)
+
+    rows = []
+
+    def report(name, us_per_call, derived):
+        rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}")
+
+    failed = []
+    for mod in (bench_figure1, bench_table1, bench_scheduler, bench_jaxpr,
+                bench_kernels, bench_roofline):
+        print(f"# --- {mod.__name__} ---", flush=True)
+        try:
+            mod.run(report)
+        except Exception:
+            traceback.print_exc()
+            failed.append(mod.__name__)
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+    print(f"# {len(rows)} benchmark rows OK")
+
+
+if __name__ == "__main__":
+    main()

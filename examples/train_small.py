@@ -1,0 +1,53 @@
+"""Train a small LM for a few hundred steps on the synthetic Markov data
+pipeline — loss drops well below the unigram entropy, demonstrating the full
+training substrate (AdamW + cosine schedule + remat + checkpointing).
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset
+from repro.models.model import Model
+from repro.training import make_train_step, train_state_init
+from repro.training.checkpoint import save_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="llama3.2-3b@smoke")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).replace(num_layers=4, d_model=256)
+    model = Model(cfg)
+    state = train_state_init(cfg, jax.random.PRNGKey(0))
+    n_params = sum(l.size for l in jax.tree_util.tree_leaves(state.params))
+    print(f"arch={cfg.name}  params={n_params / 1e6:.1f}M")
+
+    ds = SyntheticLMDataset(cfg, args.batch, args.seq, seed=0)
+    step_fn = jax.jit(make_train_step(model, peak_lr=3e-3, warmup=20,
+                                      total_steps=args.steps, remat=True))
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch(i).items()}
+        state, metrics = step_fn(state, batch)
+        if i % 20 == 0 or i == args.steps - 1:
+            dt = time.perf_counter() - t0
+            print(f"step {i:4d}  loss={float(metrics['loss']):.3f}  "
+                  f"lr={float(metrics['lr']):.2e}  "
+                  f"gnorm={float(metrics['grad_norm']):.2f}  "
+                  f"({dt:.1f}s)")
+    f = save_checkpoint(args.ckpt_dir, state.params, step=args.steps)
+    print(f"checkpoint: {f}")
+
+
+if __name__ == "__main__":
+    main()

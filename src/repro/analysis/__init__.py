@@ -1,0 +1,5 @@
+from .roofline import (HardwareSpec, TPU_V5E, collective_bytes_from_hlo,
+                       roofline_report)
+
+__all__ = ["HardwareSpec", "TPU_V5E", "collective_bytes_from_hlo",
+           "roofline_report"]

@@ -1,0 +1,18 @@
+# The paper's primary contribution: peak-memory-minimal operator scheduling
+# (Liberis & Lane 2019) plus the runtime substrates built around it.
+from .graph import Graph, Operator, Tensor, linear_chains
+from .scheduler import ScheduleResult, minimise_peak_memory
+from .heuristics import (beam_schedule, build_chains, greedy_schedule,
+                         minimise_peak_memory_contracted, schedule)
+from .allocator import (ArenaPlan, ArenaPlanner, DynamicAllocator, Placement,
+                        static_plan_size, tensor_lifetimes)
+from . import profile
+
+__all__ = [
+    "Graph", "Operator", "Tensor", "linear_chains",
+    "ScheduleResult", "minimise_peak_memory",
+    "beam_schedule", "build_chains", "greedy_schedule",
+    "minimise_peak_memory_contracted", "schedule",
+    "ArenaPlan", "ArenaPlanner", "DynamicAllocator", "Placement",
+    "static_plan_size", "tensor_lifetimes", "profile",
+]

@@ -1,0 +1,5 @@
+from .figure1 import figure1_graph
+from .swiftnet import swiftnet_cell_graph
+from .mobilenet import mobilenet_v1_graph
+
+__all__ = ["figure1_graph", "swiftnet_cell_graph", "mobilenet_v1_graph"]

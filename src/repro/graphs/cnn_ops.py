@@ -1,0 +1,136 @@
+"""Executable semantics for CNN graph operators (used by the
+micro-interpreter simulator).  Weights are deterministic per-op constants
+kept in ``Operator.attrs`` — they model NOR-Flash residency (paper §2.2:
+parameters are immutable static data, only activations occupy SRAM), so they
+are *not* tensors of the scheduling graph.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+try:  # jnp when available (tests run it through jax), numpy otherwise
+    import jax.numpy as jnp
+    from jax import lax
+    _HAVE_JAX = True
+except Exception:  # pragma: no cover
+    _HAVE_JAX = False
+
+from repro.core.graph import Graph
+
+
+def _weight(name: str, shape: Tuple[int, ...], scale: float = 0.1):
+    rng = np.random.default_rng(abs(hash(name)) % (2 ** 32))
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def conv_out_hw(h: int, w: int, stride: int) -> Tuple[int, int]:
+    return math.ceil(h / stride), math.ceil(w / stride)
+
+
+# Each builder registers a tensor + operator on the graph and returns the
+# output tensor name.  Sizes are int8 bytes = H*W*C (paper models are int8).
+class CNNBuilder:
+    def __init__(self, graph: Graph):
+        self.g = graph
+        self.shapes: Dict[str, Tuple[int, int, int]] = {}
+        self._n = 0
+
+    def _next(self, prefix: str) -> str:
+        self._n += 1
+        return f"{prefix}{self._n}"
+
+    def input(self, name: str, h: int, w: int, c: int) -> str:
+        self.g.add_tensor(name, h * w * c, (h, w, c))
+        self.shapes[name] = (h, w, c)
+        return name
+
+    def _emit(self, kind: str, inputs: Sequence[str], out_shape, fn, **attrs):
+        name = self._next(kind)
+        out = f"{name}_out"
+        h, w, c = out_shape
+        self.g.add_tensor(out, h * w * c, out_shape)
+        self.shapes[out] = out_shape
+        self.g.add_operator(name, list(inputs), out, kind=kind, fn=fn, **attrs)
+        return out
+
+    def conv(self, x: str, cout: int, k: int = 1, stride: int = 1) -> str:
+        h, w, cin = self.shapes[x]
+        oh, ow = conv_out_hw(h, w, stride)
+        wname = f"conv{self._n + 1}_w"
+        wgt = _weight(wname, (k, k, cin, cout))
+
+        def fn(a, w=wgt, stride=stride):
+            return conv2d(a, w, stride)
+
+        return self._emit("conv", [x], (oh, ow, cout), fn,
+                          weight_bytes=wgt.size, k=k, stride=stride)
+
+    def dwconv(self, x: str, k: int = 3, stride: int = 1) -> str:
+        h, w, cin = self.shapes[x]
+        oh, ow = conv_out_hw(h, w, stride)
+        wname = f"dw{self._n + 1}_w"
+        wgt = _weight(wname, (k, k, cin, 1))
+
+        def fn(a, w=wgt, stride=stride):
+            return dwconv2d(a, w, stride)
+
+        return self._emit("dwconv", [x], (oh, ow, cin), fn,
+                          weight_bytes=wgt.size, k=k, stride=stride)
+
+    def concat(self, xs: Sequence[str]) -> str:
+        shapes = [self.shapes[x] for x in xs]
+        h, w = shapes[0][0], shapes[0][1]
+        c = sum(s[2] for s in shapes)
+
+        def fn(*arrays):
+            return jnp.concatenate(arrays, axis=-1)
+
+        return self._emit("concat", xs, (h, w, c), fn)
+
+    def add(self, a: str, b: str) -> str:
+        def fn(x, y):
+            return x + y
+
+        return self._emit("add", [a, b], self.shapes[a], fn)
+
+    def avgpool(self, x: str) -> str:
+        h, w, c = self.shapes[x]
+
+        def fn(a):
+            return jnp.mean(a, axis=(0, 1), keepdims=True)
+
+        return self._emit("avgpool", [x], (1, 1, c), fn)
+
+    def fc(self, x: str, nout: int) -> str:
+        h, w, c = self.shapes[x]
+        wgt = _weight(f"fc{self._n + 1}_w", (h * w * c, nout))
+
+        def fn(a, w=wgt):
+            return jnp.reshape(a, (1, 1, -1)) @ w
+
+        return self._emit("fc", [x], (1, 1, nout), fn, weight_bytes=wgt.size)
+
+
+def conv2d(x, w, stride: int):
+    """x: (H,W,Cin) f32; w: (k,k,Cin,Cout); SAME padding; relu."""
+    y = lax.conv_general_dilated(
+        x[None], w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+    return jnp.maximum(y, 0.0)
+
+
+def dwconv2d(x, w, stride: int):
+    cin = x.shape[-1]
+    y = lax.conv_general_dilated(
+        x[None], jnp.reshape(jnp.transpose(w, (0, 1, 3, 2)), (w.shape[0], w.shape[1], 1, cin)),
+        window_strides=(stride, stride), padding="SAME",
+        feature_group_count=cin,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+    return jnp.maximum(y, 0.0)
+
+
+def model_weight_bytes(graph: Graph) -> int:
+    return sum(op.attrs.get("weight_bytes", 0) for op in graph.operators)

@@ -1,0 +1,37 @@
+"""The paper's Figure-1 example graph, reconstructed exactly from Appendix A.
+
+Solving the working-set tables of Figures 2/3 gives the tensor sizes:
+  t0=1568 (input), t1=3136, t2=1568, t3=512, t4=512, t5=256, t6=256, t7=512
+and the structure: two branches off t1 — (op2→op3→op5) and (op4→op6) —
+joined by a concat (op7):
+
+    t0 ──op1──► t1 ──op2──► t2 ──op3──► t3 ──op5──► t5 ─┐
+                 └──op4──► t4 ──op6──► t6 ───────────────┴─op7──► t7
+
+Default order 1..7 peaks at 5,216 B (at op3); optimal order
+1,4,6,2,3,5,7 peaks at 4,960 B (at op2) — Table rows reproduced in tests.
+"""
+from __future__ import annotations
+
+from repro.core.graph import Graph
+
+SIZES = {"t0": 1568, "t1": 3136, "t2": 1568, "t3": 512,
+         "t4": 512, "t5": 256, "t6": 256, "t7": 512}
+
+DEFAULT_PEAK = 5216
+OPTIMAL_PEAK = 4960
+
+
+def figure1_graph() -> Graph:
+    g = Graph()
+    for name, size in SIZES.items():
+        g.add_tensor(name, size)
+    g.add_operator("op1", ["t0"], "t1", kind="conv2d")
+    g.add_operator("op2", ["t1"], "t2", kind="conv2d")
+    g.add_operator("op3", ["t2"], "t3", kind="conv2d")
+    g.add_operator("op4", ["t1"], "t4", kind="conv2d")
+    g.add_operator("op5", ["t3"], "t5", kind="conv2d")
+    g.add_operator("op6", ["t4"], "t6", kind="conv2d")
+    g.add_operator("op7", ["t5", "t6"], "t7", kind="concat")
+    g.set_outputs(["t7"])
+    return g

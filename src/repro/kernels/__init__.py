@@ -1,0 +1,4 @@
+from .flash_attention.ops import flash_attention
+from .decode_attention.ops import decode_attention
+
+__all__ = ["flash_attention", "decode_attention"]

@@ -1,0 +1,114 @@
+"""Single-token decode attention Pallas TPU kernel.
+
+Decode is memory-bound: the whole KV cache streams HBM→VMEM once per step
+while compute is tiny (1 query row).  The kernel therefore:
+
+* blocks over the cache sequence axis (grid = (B·H, S/bs)) so each step
+  pulls one [bs, D] K tile + one [bs, D] V tile into VMEM,
+* keeps the online-softmax carry (acc[D], m, l) in VMEM scratch across the
+  sequence axis (sequential TPU grid),
+* masks invalid cache rows from per-batch ``lengths`` (scalar prefetch-style
+  operand, replicated to each grid step).
+
+The length mask uses broadcasted_iota on the sublane axis — TPU requires
+≥2D iota.  Oracle: ``ref.decode_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale: float, bs: int,
+                   n_blocks: int):
+    blk = pl.program_id(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [1, D] row
+    k = k_ref[0].astype(jnp.float32)                  # [bs, D]
+    v = v_ref[0].astype(jnp.float32)
+
+    s = (k @ q[0][:, None])[:, 0]                     # [bs]
+    rows = blk * bs + lax.broadcasted_iota(jnp.int32, (bs, 1), 0)[:, 0]
+    valid = rows < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                            # [bs]
+    l_ref[0] = l_ref[0] * alpha + p.sum()
+    acc_ref[...] = acc_ref[...] * alpha + (p[None, :] @ v)
+    m_ref[0] = m_new
+
+    @pl.when(blk == n_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[0], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, lengths: jax.Array, *,
+                            bs: int = 256,
+                            softmax_scale: Optional[float] = None,
+                            interpret: bool = False) -> jax.Array:
+    """q [B,H,D]; caches [B,S,K,D]; lengths [B] int32 -> [B,H,D]."""
+    B, H, D = q.shape
+    _, S, K, _ = k_cache.shape
+    assert H % K == 0
+    groups = H // K
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    bs = min(bs, S)
+    assert S % bs == 0
+    nb = S // bs
+
+    qh = q.reshape(B * H, 1, D)
+    kh = k_cache.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    vh = v_cache.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    len_h = jnp.repeat(lengths.astype(jnp.int32), H)   # [B*H]
+
+    def q_map(bh, j):
+        return (bh, 0, 0)
+
+    def kv_map(bh, j):
+        b, h = bh // H, bh % H
+        return (b * K + h // groups, j, 0)
+
+    def len_map(bh, j):
+        return (bh,)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bs=bs,
+                               n_blocks=nb)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nb),
+        in_specs=[
+            pl.BlockSpec((1,), len_map),
+            pl.BlockSpec((1, 1, D), q_map),
+            pl.BlockSpec((1, bs, D), kv_map),
+            pl.BlockSpec((1, bs, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(len_h, qh, kh, vh)
+    return out.reshape(B, H, D)

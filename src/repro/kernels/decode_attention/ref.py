@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, lengths: jax.Array, *,
+                         softmax_scale: Optional[float] = None) -> jax.Array:
+    """q [B,H,D]; caches [B,S,K,D]; lengths [B] (valid prefix).  -> [B,H,D]"""
+    B, H, D = q.shape
+    _, S, K, _ = k_cache.shape
+    groups = H // K
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(B, K, groups, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    mask = jnp.arange(S)[None] < lengths[:, None]          # [B,S]
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,117 @@
+"""Flash-attention (prefill) Pallas TPU kernel.
+
+TPU adaptation notes (vs the CUDA flash-attention algorithm):
+* the grid is (batch·q_heads, Sq/bq, Skv/bk) and TPU executes it
+  *sequentially* with the last axis innermost, so the online-softmax carry
+  (acc, running max, denominator) lives in VMEM scratch that persists across
+  the kv-block axis — no atomics / shared-memory tiling as on GPU;
+* block shapes keep the lane dimension at the head_dim and the sublane at
+  bq/bk multiples of 8 (f32) — MXU-aligned when bq=bk=128 and D∈{64,128};
+* GQA is expressed in the BlockSpec index_map (kv head = q head // group),
+  so no head-replicated HBM traffic.
+
+Validated against ``ref.attention_ref`` in interpret mode on CPU; compiled
+path requires a real TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, bq: int, bk: int,
+                  n_kv_blocks: int, q_offset: int = 0):
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [bq, D]
+    k = k_ref[0].astype(jnp.float32)                  # [bk, D]
+    v = v_ref[0].astype(jnp.float32)                  # [bk, D]
+    s = q @ k.T                                       # [bq, bk]
+
+    if causal:
+        # queries are the LAST Sq positions of the kv axis (prefill with a
+        # shorter query window): absolute q position = q_offset + row
+        rows = q_offset + q_idx * bq \
+            + lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = kv_idx * bk + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # [bq]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(kv_idx == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, bq: int = 128, bk: int = 128,
+                           softmax_scale: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """q [B,Sq,H,D]; k,v [B,Skv,K,D].  Layout is transposed to
+    head-major [B·H, S, D] so each grid step owns one (head, q-block)."""
+    B, Sq, H, D = q.shape
+    _, Skv, K, _ = k.shape
+    assert H % K == 0
+    groups = H // K
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * K, Skv, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * K, Skv, D)
+
+    def q_map(bh, i, j):
+        return (bh, i, 0)
+
+    def kv_map(bh, i, j):
+        b, h = bh // H, bh % H
+        return (b * K + h // groups, j, 0)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk, n_kv_blocks=nk,
+                               q_offset=Skv - Sq)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), q_map),
+            pl.BlockSpec((1, bk, D), kv_map),
+            pl.BlockSpec((1, bk, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),   # acc
+            pltpu.VMEM((bq,), jnp.float32),     # running max
+            pltpu.VMEM((bq,), jnp.float32),     # denominator
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

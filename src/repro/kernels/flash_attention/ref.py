@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel: naive materialised
+softmax attention with causal / GQA semantics.  O(S²) memory — test shapes
+only."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  softmax_scale: Optional[float] = None) -> jax.Array:
+    """q [B,Sq,H,D]; k,v [B,Skv,K,D], H % K == 0.  Returns [B,Sq,H,D]."""
+    B, Sq, H, D = q.shape
+    _, Skv, K, _ = k.shape
+    groups = H // K
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Sq, K, groups, D)
+    s = jnp.einsum("bikgd,bjkd->bkgij", qf * scale,
+                   k.astype(jnp.float32))
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgij,bjkd->bikgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

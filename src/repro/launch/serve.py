@@ -1,0 +1,46 @@
+"""Serving launcher: batched requests through the ServingEngine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b@smoke \
+        --requests 8 --max-new 12
+"""
+import argparse
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b@smoke")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=96)
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models.model import init_params
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, max_batch=args.max_batch,
+                           cache_len=args.cache_len)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, min(500, cfg.vocab_size),
+                                        rng.integers(4, 24))
+                    .astype(np.int32),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    results = engine.serve(reqs)
+    for r in results:
+        print(f"req {r.rid}: prefill {r.prefill_ms:.0f}ms "
+              f"decode {r.decode_ms:.0f}ms tokens={r.tokens}")
+    print(f"\narena peak {engine.stats['arena_peak_bytes']/1e6:.1f} MB "
+          f"(static {engine.stats['static_bytes']/1e6:.1f} MB)")
+    print(engine.analyse_decode_schedule(args.max_batch))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .interpreter import InterpreterReport, MicroInterpreter
+
+__all__ = ["MicroInterpreter", "InterpreterReport"]

@@ -1,0 +1,3 @@
+from .model import (Model, init_params, param_specs)
+
+__all__ = ["Model", "init_params", "param_specs"]

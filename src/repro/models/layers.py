@@ -1,0 +1,160 @@
+"""Shared building blocks: norms, RoPE, chunked (online-softmax) attention.
+
+The chunked attention is the single attention code path for training and
+prefill — a pure-JAX flash-attention formulation (lax.scan over KV chunks
+with running max/denominator) whose peak memory is O(S·chunk) instead of
+O(S²), which is what lets the 32k-prefill and whisper-encoder shapes lower
+within HBM.  The Pallas kernel in ``repro.kernels.flash_attention`` is the
+TPU-optimised version of the same computation (used on real hardware; the
+jnp path is the oracle and the dry-run path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import runtime
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dtype)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions [...]; returns cos/sin of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, H, D]; cos/sin [..., S, D//2] broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------- chunked flash attention
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk: int = 512,
+                      q_positions: Optional[jax.Array] = None,
+                      kv_positions: Optional[jax.Array] = None,
+                      sliding_window: int = 0,
+                      softmax_scale: Optional[float] = None) -> jax.Array:
+    """Online-softmax attention.
+
+    q: [B, Sq, H, D]; k, v: [B, Skv, K, D] with H % K == 0 (GQA).
+    Scans over KV chunks carrying (acc, running_max, denom): peak memory is
+    O(B·H·Sq·chunk) rather than O(B·H·Sq·Skv).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, K, _ = k.shape
+    assert H % K == 0, (H, K)
+    groups = H // K
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv)
+
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad),
+                               constant_values=jnp.iinfo(jnp.int32).max)
+    kc = k.reshape(B, n_chunks, chunk, K, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, K, D).transpose(1, 0, 2, 3, 4)
+    pc = kv_positions.reshape(n_chunks, chunk)
+
+    qf = q.astype(jnp.float32) * scale
+    # [B, K, groups, Sq, D] so GQA is an einsum over the shared K axis
+    qg = qf.reshape(B, Sq, K, groups, D).transpose(0, 2, 3, 1, 4)
+
+    NEG = jnp.float32(-1e30)
+
+    def step(carry, inp):
+        acc, m, denom = carry
+        kch, vch, pch = inp          # [B, chunk, K, D], [chunk]
+        s = jnp.einsum("bkgsd,bckd->bkgsc", qg, kch.astype(jnp.float32))
+        # mask: causal and/or sliding window on absolute positions
+        qpos = q_positions[:, None]          # [Sq, 1]
+        kpos = pch[None, :]                  # [1, chunk]
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if sliding_window:
+            mask &= kpos > qpos - sliding_window
+        s = jnp.where(mask[None, None, None], s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        denom = denom * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgsc,bckd->bkgsd", p, vch.astype(jnp.float32))
+        return (acc, m_new, denom), None
+
+    acc0 = jnp.zeros((B, K, groups, Sq, D), jnp.float32)
+    m0 = jnp.full((B, K, groups, Sq), NEG)
+    d0 = jnp.zeros((B, K, groups, Sq), jnp.float32)
+    (acc, m, denom), _ = lax.scan(step, (acc0, m0, d0), (kc, vc, pc),
+                                  unroll=runtime.scan_unroll())
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     length_mask: jax.Array,
+                     softmax_scale: Optional[float] = None) -> jax.Array:
+    """Single-position attention against a cache.
+
+    q: [B, 1, H, D]; caches: [B, S, K, D]; length_mask: [B, S] bool (True =
+    attend).  The Pallas ``decode_attention`` kernel implements this same
+    contract with blocked KV streaming.
+    """
+    B, _, H, D = q.shape
+    _, S, K, _ = k_cache.shape
+    groups = H // K
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(B, K, groups, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    s = jnp.where(length_mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+             w_out: jax.Array, b_out: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ w_in + b_in) @ w_out + b_out

@@ -1,0 +1,1155 @@
+"""Unified multi-architecture transformer stack.
+
+One ``Model`` class covers all six assigned families:
+
+* dense / MoE / VLM decoders  — uniform stack of attention blocks, scanned
+  over stacked per-layer parameters (compile time independent of depth);
+* Zamba2 hybrid               — groups of Mamba2 layers with a weight-SHARED
+  attention block applied after each group (nested scan);
+* xLSTM                       — groups of mLSTM layers with an sLSTM closing
+  each group;
+* Whisper                     — encoder stack (non-causal) + decoder stack
+  with cross-attention to cached encoder K/V.
+
+Everything is pure-functional: ``init_params`` builds the pytree (and
+``jax.eval_shape`` of it gives the dry-run specs), ``param_specs`` the
+matching PartitionSpec pytree.  Modality frontends (audio conv codec, ViT)
+are stubs per the assignment carve-out: inputs arrive as precomputed
+frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from . import runtime, ssm
+from .layers import (apply_rope, chunked_attention, decode_attention,
+                     rms_norm, rope_angles, swiglu)
+from .moe import moe_ffn
+
+Params = Dict[str, Any]
+
+
+def _lscan(body, init, xs, **kw):
+    """Layer/chunk scan: unrollable for the roofline analysis pass."""
+    return lax.scan(body, init, xs, unroll=runtime.scan_unroll(), **kw)
+
+
+# --------------------------------------------------------------- utilities
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _shard(x, mesh: Optional[Mesh], *spec):
+    if mesh is None:
+        return x
+    return lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def _tp(cfg: ModelConfig, mesh: Optional[Mesh], n: int) -> Optional[str]:
+    """'model' when n divides evenly over the tensor-parallel axis."""
+    if mesh is None or "model" not in mesh.shape:
+        return None
+    return "model" if n % mesh.shape["model"] == 0 else None
+
+
+DP = ("data",)   # batch axes; the launcher extends this with "pod"
+
+
+def resolve_kv_mode(cfg: ModelConfig, mesh: Optional[Mesh]) -> str:
+    """Decode-cache sharding mode (see ModelConfig.kv_mode)."""
+    if mesh is None or "model" not in mesh.shape:
+        return "heads"
+    if cfg.kv_mode != "auto":
+        return cfg.kv_mode
+    return "heads" if cfg.num_kv_heads % mesh.shape["model"] == 0 \
+        else "sequence"
+
+
+# ------------------------------------------------------------------- init
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _attn_block_params(cfg: ModelConfig, key, n_layers: int,
+                       cross: bool = False) -> Params:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 16)
+    L = (n_layers,) if n_layers else ()
+    s_in = 1.0 / math.sqrt(d)
+    p = {
+        "ln1": jnp.ones(L + (d,), jnp.float32),
+        "wq": _init(ks[0], L + (d, H, hd), s_in, dt),
+        "wk": _init(ks[1], L + (d, K, hd), s_in, dt),
+        "wv": _init(ks[2], L + (d, K, hd), s_in, dt),
+        "wo": _init(ks[3], L + (H, hd, d), 1.0 / math.sqrt(H * hd), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros(L + (H, hd), dt)
+        p["bk"] = jnp.zeros(L + (K, hd), dt)
+        p["bv"] = jnp.zeros(L + (K, hd), dt)
+    if cross:
+        p.update({
+            "ln_x": jnp.ones(L + (d,), jnp.float32),
+            "wq_x": _init(ks[4], L + (d, H, hd), s_in, dt),
+            "wk_x": _init(ks[5], L + (d, H, hd), s_in, dt),
+            "wv_x": _init(ks[6], L + (d, H, hd), s_in, dt),
+            "wo_x": _init(ks[7], L + (H, hd, d), 1.0 / math.sqrt(H * hd), dt),
+        })
+    # FFN
+    ff = cfg.d_ff
+    if cfg.is_moe:
+        E = cfg.num_experts
+        p.update({
+            "ln2": jnp.ones(L + (d,), jnp.float32),
+            "router": _init(ks[8], L + (d, E), s_in, jnp.float32),
+            "we_g": _init(ks[9], L + (E, d, ff), s_in, dt),
+            "we_u": _init(ks[10], L + (E, d, ff), s_in, dt),
+            "we_d": _init(ks[11], L + (E, ff, d), 1.0 / math.sqrt(ff), dt),
+        })
+    elif ff:
+        p.update({
+            "ln2": jnp.ones(L + (d,), jnp.float32),
+            "wg": _init(ks[8], L + (d, ff), s_in, dt),
+            "wu": _init(ks[9], L + (d, ff), s_in, dt),
+            "wdn": _init(ks[10], L + (ff, d), 1.0 / math.sqrt(ff), dt),
+        })
+    return p
+
+
+def _attn_block_specs(cfg: ModelConfig, mesh, n_layers: int,
+                      cross: bool = False) -> Params:
+    tpH = _tp(cfg, mesh, cfg.num_heads)
+    tpK = _tp(cfg, mesh, cfg.num_kv_heads)
+    L = (None,) if n_layers else ()
+    p = {
+        "ln1": P(*L, None),
+        "wq": P(*L, "data", tpH, None),
+        "wk": P(*L, "data", tpK, None),
+        "wv": P(*L, "data", tpK, None),
+        "wo": P(*L, tpH, None, "data"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P(*L, tpH, None)
+        p["bk"] = P(*L, tpK, None)
+        p["bv"] = P(*L, tpK, None)
+    if cross:
+        p.update({"ln_x": P(*L, None),
+                  "wq_x": P(*L, "data", tpH, None),
+                  "wk_x": P(*L, "data", tpH, None),
+                  "wv_x": P(*L, "data", tpH, None),
+                  "wo_x": P(*L, tpH, None, "data")})
+    if cfg.is_moe:
+        p.update({"ln2": P(*L, None),
+                  "router": P(*L, None, None),
+                  "we_g": P(*L, "model", "data", None),
+                  "we_u": P(*L, "model", "data", None),
+                  "we_d": P(*L, "model", None, "data")})
+    elif cfg.d_ff:
+        tpF = _tp(cfg, mesh, cfg.d_ff)
+        p.update({"ln2": P(*L, None),
+                  "wg": P(*L, "data", tpF),
+                  "wu": P(*L, "data", tpF),
+                  "wdn": P(*L, tpF, "data")})
+    return p
+
+
+def _mamba_block_params(cfg: ModelConfig, key, n_layers: int) -> Params:
+    d, N = cfg.d_model, cfg.ssm_state
+    H, Ph = cfg.ssm_heads, cfg.ssm_head_dim
+    W = cfg.conv_width
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 10)
+    L = (n_layers,)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "ln": jnp.ones(L + (d,), jnp.float32),
+        "w_x": _init(ks[0], L + (d, H, Ph), s, dt),
+        "w_z": _init(ks[1], L + (d, H, Ph), s, dt),
+        "w_B": _init(ks[2], L + (d, N), s, dt),
+        "w_C": _init(ks[3], L + (d, N), s, dt),
+        "w_dt": _init(ks[4], L + (d, H), s, dt),
+        "conv_x": _init(ks[5], L + (W, H, Ph), 0.5, jnp.float32),
+        "conv_B": _init(ks[6], L + (W, N), 0.5, jnp.float32),
+        "conv_C": _init(ks[7], L + (W, N), 0.5, jnp.float32),
+        "A_log": jnp.zeros(L + (H,), jnp.float32),
+        "D": jnp.ones(L + (H,), jnp.float32),
+        "dt_bias": jnp.zeros(L + (H,), jnp.float32),
+        "out_norm": jnp.ones(L + (H, Ph), jnp.float32),
+        "w_out": _init(ks[8], L + (H, Ph, d), 1.0 / math.sqrt(H * Ph), dt),
+    }
+
+
+def _mamba_block_specs(cfg: ModelConfig, mesh, n_layers: int) -> Params:
+    tpH = _tp(cfg, mesh, cfg.ssm_heads)
+    L = (None,)
+    return {
+        "ln": P(*L, None),
+        "w_x": P(*L, "data", tpH, None),
+        "w_z": P(*L, "data", tpH, None),
+        "w_B": P(*L, "data", None),
+        "w_C": P(*L, "data", None),
+        "w_dt": P(*L, "data", tpH),
+        "conv_x": P(*L, None, tpH, None),
+        "conv_B": P(*L, None, None),
+        "conv_C": P(*L, None, None),
+        "A_log": P(*L, tpH),
+        "D": P(*L, tpH),
+        "dt_bias": P(*L, tpH),
+        "out_norm": P(*L, tpH, None),
+        "w_out": P(*L, tpH, None, "data"),
+    }
+
+
+def _xlstm_block_params(cfg: ModelConfig, key, n_layers: int,
+                        kind: str) -> Params:
+    d, H = cfg.d_model, cfg.num_heads
+    Ph = d // H
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    L = (n_layers,)
+    s = 1.0 / math.sqrt(d)
+    if kind == "mlstm":
+        return {
+            "ln": jnp.ones(L + (d,), jnp.float32),
+            "w_q": _init(ks[0], L + (d, H, Ph), s, dt),
+            "w_k": _init(ks[1], L + (d, H, Ph), s, dt),
+            "w_v": _init(ks[2], L + (d, H, Ph), s, dt),
+            "w_ig": _init(ks[3], L + (d, H), s, jnp.float32),
+            "w_fg": _init(ks[4], L + (d, H), s, jnp.float32),
+            "fg_bias": jnp.full(L + (H,), 3.0, jnp.float32),
+            "out_norm": jnp.ones(L + (H, Ph), jnp.float32),
+            "w_o": _init(ks[5], L + (H, Ph, d), 1.0 / math.sqrt(d), dt),
+        }
+    return {   # slstm
+        "ln": jnp.ones(L + (d,), jnp.float32),
+        "w_in": _init(ks[0], L + (d, 4, H, Ph), s, dt),
+        "r": _init(ks[1], L + (4, H, Ph, Ph), 1.0 / math.sqrt(Ph),
+                   jnp.float32),
+        "b": jnp.zeros(L + (4, H, Ph), jnp.float32),
+        "w_o": _init(ks[2], L + (d, d), s, dt),
+    }
+
+
+def _xlstm_block_specs(cfg: ModelConfig, mesh, n_layers: int,
+                       kind: str) -> Params:
+    tpH = _tp(cfg, mesh, cfg.num_heads)
+    L = (None,)
+    if kind == "mlstm":
+        return {"ln": P(*L, None),
+                "w_q": P(*L, "data", tpH, None),
+                "w_k": P(*L, "data", tpH, None),
+                "w_v": P(*L, "data", tpH, None),
+                "w_ig": P(*L, "data", tpH),
+                "w_fg": P(*L, "data", tpH),
+                "fg_bias": P(*L, tpH),
+                "out_norm": P(*L, tpH, None),
+                "w_o": P(*L, tpH, None, "data")}
+    return {"ln": P(*L, None),
+            "w_in": P(*L, "data", None, tpH, None),
+            "r": P(*L, None, tpH, None, None),
+            "b": P(*L, None, tpH, None),
+            "w_o": P(*L, "data", None)}
+
+
+# ----------------------------------------------------------------- layout
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """How the stacked parameter groups tile the depth of the network."""
+    kind: str                 # uniform | zamba | xlstm | encdec
+    groups: int = 0           # hybrid groups
+    per_group: int = 0        # inner layers per group
+
+
+def model_layout(cfg: ModelConfig) -> Layout:
+    if cfg.arch_type == "hybrid":
+        g = cfg.num_layers // 6
+        return Layout("zamba", groups=g, per_group=6)
+    if cfg.arch_type == "ssm":
+        g = cfg.num_layers // 6
+        return Layout("xlstm", groups=g, per_group=6)
+    if cfg.arch_type == "audio":
+        return Layout("encdec")
+    return Layout("uniform")
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, V = cfg.d_model, cfg.padded_vocab
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 12)
+    lay = model_layout(cfg)
+    p: Params = {
+        "embed": _init(keys[0], (V, d), 1.0, dt),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = _init(keys[1], (d, V), 1.0 / math.sqrt(d), dt)
+    if lay.kind == "uniform":
+        p["blocks"] = _attn_block_params(cfg, keys[2], cfg.num_layers)
+    elif lay.kind == "zamba":
+        n_mamba = lay.groups * lay.per_group
+        p["mamba"] = _mamba_block_params(cfg, keys[2], n_mamba)
+        p["shared_attn"] = _attn_block_params(cfg, keys[3], 0)
+    elif lay.kind == "xlstm":
+        n_m = lay.groups * (lay.per_group - 1)
+        p["mlstm"] = _xlstm_block_params(cfg, keys[2], n_m, "mlstm")
+        p["slstm"] = _xlstm_block_params(cfg, keys[3], lay.groups, "slstm")
+    elif lay.kind == "encdec":
+        p["encoder"] = _attn_block_params(cfg, keys[2], cfg.encoder_layers)
+        p["blocks"] = _attn_block_params(cfg, keys[3], cfg.num_layers,
+                                         cross=True)
+    if cfg.num_patch_tokens:
+        p["vis_proj"] = _init(keys[4], (cfg.frontend_dim, d),
+                              1.0 / math.sqrt(cfg.frontend_dim), dt)
+    if cfg.arch_type == "audio":
+        p["frame_proj"] = _init(keys[5], (cfg.frontend_dim, d),
+                                1.0 / math.sqrt(cfg.frontend_dim), dt)
+    return p
+
+
+def param_specs(cfg: ModelConfig, mesh: Optional[Mesh]) -> Params:
+    lay = model_layout(cfg)
+    tpV = _tp(cfg, mesh, cfg.padded_vocab)
+    p: Params = {
+        "embed": P(tpV, "data"),
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = P("data", tpV)
+    if lay.kind == "uniform":
+        p["blocks"] = _attn_block_specs(cfg, mesh, cfg.num_layers)
+    elif lay.kind == "zamba":
+        p["mamba"] = _mamba_block_specs(cfg, mesh, lay.groups * lay.per_group)
+        p["shared_attn"] = _attn_block_specs(cfg, mesh, 0)
+    elif lay.kind == "xlstm":
+        p["mlstm"] = _xlstm_block_specs(cfg, mesh,
+                                        lay.groups * (lay.per_group - 1),
+                                        "mlstm")
+        p["slstm"] = _xlstm_block_specs(cfg, mesh, lay.groups, "slstm")
+    elif lay.kind == "encdec":
+        p["encoder"] = _attn_block_specs(cfg, mesh, cfg.encoder_layers)
+        p["blocks"] = _attn_block_specs(cfg, mesh, cfg.num_layers, cross=True)
+    if cfg.num_patch_tokens:
+        p["vis_proj"] = P(None, "data")
+    if cfg.arch_type == "audio":
+        p["frame_proj"] = P(None, "data")
+    if cfg.act_shard == "cp":
+        # context parallelism: the model axis carries the sequence, so
+        # weights must not claim it — they stay FSDP-sharded over 'data'
+        # and are gathered per layer (except MoE experts, which keep their
+        # expert-parallel 'model' sharding).
+        def _strip_model(spec):
+            return P(*(None if ax == "model" else ax for ax in spec))
+        for blk in ("blocks", "encoder", "mamba", "shared_attn", "mlstm",
+                    "slstm"):
+            if blk in p:
+                p[blk] = {k_: (v if k_.startswith("we_") or k_ == "router"
+                               else _strip_model(v))
+                          for k_, v in p[blk].items()}
+        p["embed"] = _strip_model(p["embed"])
+        if "head" in p:
+            p["head"] = _strip_model(p["head"])
+    if not cfg.moe_fsdp:
+        for blk in ("blocks",):
+            if blk in p:
+                for k_ in ("we_g", "we_u", "we_d"):
+                    if k_ in p[blk]:
+                        p[blk][k_] = P(*("model" if ax == "model" else None
+                                         for ax in p[blk][k_]))
+    if mesh is None:
+        p = jax.tree_util.tree_map(lambda _: P(), p,
+                                   is_leaf=lambda x: isinstance(x, P))
+    return p
+
+
+# ------------------------------------------------------------------ mixers
+def _dp_axes(mesh: Optional[Mesh]) -> Tuple[str, ...]:
+    if mesh is None:
+        return ()
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _dp_for(mesh: Optional[Mesh], batch: int) -> Tuple[str, ...]:
+    """Batch axes, but only when the batch divides them (long_500k has
+    global_batch=1 -> replicate instead of sharding over data)."""
+    dp = _dp_axes(mesh)
+    if not dp:
+        return ()
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    return dp if batch % size == 0 else ()
+
+
+def _proj_qkv(cfg, p, h):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def attn_mixer_seq(cfg: ModelConfig, mesh, p, x, positions, *,
+                   causal=True, window=0, cross_kv=None, want_kv=False):
+    """Full-sequence attention block (train / prefill).  Returns
+    (x, (k, v) or None, aux)."""
+    dp = _dp_for(mesh, x.shape[0])
+    cp = cfg.act_shard == "cp" and mesh is not None and x.shape[1] > 1
+    tpH = _tp(cfg, mesh, cfg.num_heads)
+    tpK = _tp(cfg, mesh, cfg.num_kv_heads)
+    h = rms_norm(x, p["ln1"])
+    q, k, v = _proj_qkv(cfg, p, h)
+    cos, sin = rope_angles(positions, cfg.head_dim_, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if cp:
+        # context parallelism: queries sequence-sharded over 'model';
+        # K/V replicated (all-gathered by GSPMD — cheap at small GQA kv)
+        q = _shard(q, mesh, dp, "model", None, None)
+        k = _shard(k, mesh, dp, None, None, None)
+        v = _shard(v, mesh, dp, None, None, None)
+    else:
+        q = _shard(q, mesh, dp, None, tpH, None)
+        k = _shard(k, mesh, dp, None, tpK, None)
+        v = _shard(v, mesh, dp, None, tpK, None)
+    out = chunked_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk,
+                            q_positions=positions, kv_positions=positions,
+                            sliding_window=window)
+    x = x + jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if cross_kv is not None:
+        hx = rms_norm(x, p["ln_x"])
+        qx = jnp.einsum("bsd,dhk->bshk", hx, p["wq_x"])
+        ck, cv = cross_kv            # [B, Senc, H, hd]
+        out = chunked_attention(qx, ck, cv, causal=False,
+                                chunk=cfg.attn_chunk)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, p["wo_x"])
+    x, aux = _ffn(cfg, mesh, p, x)
+    x = _shard(x, mesh, dp, "model" if cp else None, None)
+    return x, ((k, v) if want_kv else None), aux
+
+
+def _ffn(cfg, mesh, p, x):
+    aux = jnp.float32(0.0)
+    if cfg.is_moe:
+        h = rms_norm(x, p["ln2"])
+        y, aux = moe_ffn(h, p["router"], p["we_g"], p["we_u"], p["we_d"],
+                         k=cfg.experts_per_token,
+                         capacity_factor=cfg.capacity_factor,
+                         mesh=mesh, dp_axes=_dp_for(mesh, x.shape[0]),
+                         fsdp_axis="data" if cfg.moe_fsdp else None)
+        x = x + y
+    elif cfg.d_ff:
+        h = rms_norm(x, p["ln2"])
+        x = x + swiglu(h, p["wg"], p["wu"], p["wdn"])
+    return x, aux
+
+
+def _seqshard_decode_attn(cfg: ModelConfig, mesh, q, k_cache, v_cache,
+                          length_mask, k_new, v_new, slot):
+    """Flash-decoding over a sequence-sharded KV cache: each model shard
+    owns Sc/tp cache rows, updates them if the write slot falls in its
+    range, computes a partial softmax over its rows, and the partials merge
+    with a max/sum reduction over the 'model' axis.  This removes the
+    KV-head replication that blows past HBM when kv_heads < TP degree."""
+    dp = _dp_for(mesh, q.shape[0])
+    tp = mesh.shape["model"]
+    Sc = k_cache.shape[1]
+    Sc_loc = Sc // tp
+    scale = cfg.head_dim_ ** -0.5
+
+    def body(qb, kc, vc, mk, kn, vn, slot_):
+        i = lax.axis_index("model")
+        ls = slot_ - i * Sc_loc
+        ok = (ls >= 0) & (ls < Sc_loc)
+        lsc = jnp.clip(ls, 0, Sc_loc - 1)
+        B, _, K, hd = kc.shape
+        H = qb.shape[2]
+        groups = H // K
+        import os as _os
+        if _os.environ.get("REPRO_DECODE_BASELINE"):
+            # paper-faithful-naive cache update kept for §Perf A/B: whole-
+            # cache where + f32 cache materialisation
+            upd_k = lax.dynamic_update_slice(kc, kn.astype(kc.dtype),
+                                             (0, lsc, 0, 0))
+            upd_v = lax.dynamic_update_slice(vc, vn.astype(vc.dtype),
+                                             (0, lsc, 0, 0))
+            kc = jnp.where(ok, upd_k, kc)
+            vc = jnp.where(ok, upd_v, vc)
+            qg = (qb.astype(jnp.float32) * scale).reshape(B, K, groups, hd)
+            sc = jnp.einsum("bkgd,bskd->bkgs", qg, kc.astype(jnp.float32))
+        else:
+            # §Perf decode iteration 2: select at ROW granularity (read one
+            # row, blend, write one row) instead of jnp.where over the whole
+            # cache, which materialised two full-cache copies per layer.
+            row_k = lax.dynamic_slice(kc, (0, lsc, 0, 0), (B, 1, K, hd))
+            row_v = lax.dynamic_slice(vc, (0, lsc, 0, 0), (B, 1, K, hd))
+            kc = lax.dynamic_update_slice(
+                kc, jnp.where(ok, kn.astype(kc.dtype), row_k),
+                (0, lsc, 0, 0))
+            vc = lax.dynamic_update_slice(
+                vc, jnp.where(ok, vn.astype(vc.dtype), row_v),
+                (0, lsc, 0, 0))
+            qg = (qb.astype(jnp.float32) * scale).reshape(B, K, groups, hd)
+            # bf16 operands, f32 accumulation — no f32 cache copy
+            sc = jnp.einsum("bkgd,bskd->bkgs", qg.astype(kc.dtype), kc,
+                            preferred_element_type=jnp.float32)
+        sc = jnp.where(mk[:, None, None, :], sc, -1e30)
+        m = sc.max(-1)
+        pr = jnp.exp(sc - m[..., None])
+        pr = jnp.where(mk[:, None, None, :], pr, 0.0)
+        l = pr.sum(-1)
+        if _os.environ.get("REPRO_DECODE_BASELINE"):
+            acc = jnp.einsum("bkgs,bskd->bkgd", pr,
+                             vc.astype(jnp.float32))
+        else:
+            acc = jnp.einsum("bkgs,bskd->bkgd", pr.astype(kc.dtype), vc,
+                             preferred_element_type=jnp.float32)
+        m_g = lax.pmax(m, "model")
+        corr = jnp.exp(m - m_g)
+        acc = lax.psum(acc * corr[..., None], "model")
+        l = lax.psum(l * corr, "model")
+        out = (acc / jnp.maximum(l[..., None], 1e-30)).reshape(B, 1, H, hd)
+        return out.astype(qb.dtype), kc, vc
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp, None, None, None), P(dp, "model", None, None),
+                  P(dp, "model", None, None), P(dp, "model"),
+                  P(dp, None, None, None), P(dp, None, None, None), P()),
+        out_specs=(P(dp, None, None, None), P(dp, "model", None, None),
+                   P(dp, "model", None, None)),
+        check_vma=False,
+    )(q, k_cache, v_cache, length_mask, k_new, v_new, slot)
+
+
+def attn_mixer_step(cfg: ModelConfig, mesh, p, x, k_cache, v_cache,
+                    length_mask, slot, pos, cross_kv=None,
+                    kv_mode: str = "heads"):
+    """Single-token decode block.  x [B,1,d]; caches [B,Sc,K,hd];
+    length_mask [B,Sc] (True = attend, already includes this token's slot).
+    Returns (x, new k_cache, new v_cache, aux)."""
+    h = rms_norm(x, p["ln1"])
+    q, k, v = _proj_qkv(cfg, p, h)
+    posv = jnp.full((1,), pos, jnp.int32)
+    cos, sin = rope_angles(posv, cfg.head_dim_, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if kv_mode == "sequence" and mesh is not None:
+        out, k_cache, v_cache = _seqshard_decode_attn(
+            cfg, mesh, q, k_cache, v_cache, length_mask, k, v, slot)
+    else:
+        k_cache = lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, slot, 0, 0))
+        v_cache = lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, slot, 0, 0))
+        out = decode_attention(q, k_cache, v_cache, length_mask=length_mask)
+    x = x + jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if cross_kv is not None:
+        hx = rms_norm(x, p["ln_x"])
+        qx = jnp.einsum("bsd,dhk->bshk", hx, p["wq_x"])
+        ck, cv = cross_kv
+        full = jnp.ones(ck.shape[:2], bool)
+        out = decode_attention(qx, ck, cv, length_mask=full)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, p["wo_x"])
+    x, aux = _ffn(cfg, mesh, p, x)
+    return x, k_cache, v_cache, aux
+
+
+def _head_rms(y, scale):
+    """Per-head RMS norm: y [B,S,H,P] (or [B,H,P]), scale [H,P]."""
+    dt = y.dtype
+    y = y.astype(jnp.float32)
+    y = y * lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    return (y * scale).astype(dt)
+
+
+def _mamba_pre(cfg, p, h, conv_caches):
+    """Shared projection + conv path. h [B,S,d] -> (xh, z, Bv, Cv, ld, dt,
+    new conv caches)."""
+    B, S, _ = h.shape
+    H, Ph, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xh = jnp.einsum("bsd,dhp->bshp", h, p["w_x"]).reshape(B, S, H * Ph)
+    z = jnp.einsum("bsd,dhp->bshp", h, p["w_z"])
+    Bv = h @ p["w_B"]
+    Cv = h @ p["w_C"]
+    dt_pre = jnp.einsum("bsd,dh->bsh", h, p["w_dt"])
+    cx, cb, cc = conv_caches
+    xh, cx = ssm.causal_conv1d(xh, p["conv_x"].reshape(-1, H * Ph), cx)
+    Bv, cb = ssm.causal_conv1d(Bv, p["conv_B"], cb)
+    Cv, cc = ssm.causal_conv1d(Cv, p["conv_C"], cc)
+    xh = xh.reshape(B, S, H, Ph)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ld = dt * A              # [B,S,H], <= 0
+    return xh, z, Bv, Cv, ld, dt, (cx, cb, cc)
+
+
+def mamba_mixer_seq(cfg: ModelConfig, mesh, p, x, *, state_in=None,
+                    conv_in=None):
+    B, S, _ = x.shape
+    H, Ph, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    dp = _dp_for(mesh, x.shape[0])
+    tpH = _tp(cfg, mesh, H)
+    h = rms_norm(x, p["ln"])
+    conv0 = conv_in if conv_in is not None else (None, None, None)
+    xh, z, Bv, Cv, ld, dt, convs = _mamba_pre(cfg, p, h, conv0)
+    xh = _shard(xh, mesh, dp, None, tpH, None)
+    qh = jnp.broadcast_to(Cv[:, :, None, :], (B, S, H, N))
+    kh = jnp.broadcast_to(Bv[:, :, None, :], (B, S, H, N))
+    y, state = ssm.chunked_linear_attention(
+        qh, kh, xh, ld, dt, chunk=cfg.ssm_chunk, state_in=state_in)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = _head_rms(y, p["out_norm"])
+    out = jnp.einsum("bshp,hpd->bsd", y.astype(x.dtype), p["w_out"])
+    return x + out, (convs, state)
+
+
+def _conv_step(x_t, w, cache):
+    """x_t [B,1,C]; w [W,C]; cache [B,W-1,C]."""
+    xc = jnp.concatenate([cache, x_t], axis=1)          # [B,W,C]
+    y = jnp.einsum("bwc,wc->bc", xc.astype(jnp.float32),
+                   w.astype(jnp.float32))[:, None]
+    return jax.nn.silu(y).astype(x_t.dtype), xc[:, 1:]
+
+
+def mamba_mixer_step(cfg: ModelConfig, mesh, p, x, state, convs):
+    B = x.shape[0]
+    H, Ph, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    h = rms_norm(x, p["ln"])                             # [B,1,d]
+    xh = jnp.einsum("bsd,dhp->bshp", h, p["w_x"]).reshape(B, 1, H * Ph)
+    z = jnp.einsum("bsd,dhp->bshp", h, p["w_z"])[:, 0]
+    Bv = (h @ p["w_B"])
+    Cv = (h @ p["w_C"])
+    dt_pre = jnp.einsum("bsd,dh->bh", h[:, 0:1], p["w_dt"][None][0])
+    cx, cb, cc = convs
+    xh, cx = _conv_step(xh, p["conv_x"].reshape(-1, H * Ph), cx)
+    Bv, cb = _conv_step(Bv, p["conv_B"], cb)
+    Cv, cc = _conv_step(Cv, p["conv_C"], cc)
+    xh = xh.reshape(B, H, Ph)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])
+    ld = dt * (-jnp.exp(p["A_log"]))
+    qh = jnp.broadcast_to(Cv[:, 0, None, :], (B, H, N))
+    kh = jnp.broadcast_to(Bv[:, 0, None, :], (B, H, N))
+    y, state = ssm.linear_attention_step(state, qh, kh, xh, ld, dt)
+    y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = _head_rms(y, p["out_norm"])
+    out = jnp.einsum("bhp,hpd->bd", y.astype(x.dtype), p["w_out"])
+    return x + out[:, None], (state, (cx, cb, cc))
+
+
+def mlstm_mixer_seq(cfg: ModelConfig, mesh, p, x, *, state_in=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    Ph = d // H
+    h = rms_norm(x, p["ln"])
+    q = jnp.einsum("bsd,dhp->bshp", h, p["w_q"]) * (Ph ** -0.5)
+    k = jnp.einsum("bsd,dhp->bshp", h, p["w_k"]) * (Ph ** -0.5)
+    v = jnp.einsum("bsd,dhp->bshp", h, p["w_v"])
+    ig = jax.nn.sigmoid(jnp.einsum("bsd,dh->bsh", h, p["w_ig"])
+                        .astype(jnp.float32))
+    fg = -jax.nn.softplus(-(jnp.einsum("bsd,dh->bsh", h, p["w_fg"])
+                            .astype(jnp.float32) + p["fg_bias"]))
+    y, state = ssm.chunked_linear_attention(
+        q, k, v, fg, ig, chunk=cfg.ssm_chunk, normalize=True,
+        state_in=state_in)
+    y = _head_rms(y, p["out_norm"])
+    out = jnp.einsum("bshp,hpd->bsd", y.astype(x.dtype), p["w_o"])
+    return x + out, state
+
+
+def mlstm_mixer_step(cfg: ModelConfig, mesh, p, x, state):
+    B, _, d = x.shape
+    H = cfg.num_heads
+    Ph = d // H
+    h = rms_norm(x, p["ln"])[:, 0]
+    q = jnp.einsum("bd,dhp->bhp", h, p["w_q"]) * (Ph ** -0.5)
+    k = jnp.einsum("bd,dhp->bhp", h, p["w_k"]) * (Ph ** -0.5)
+    v = jnp.einsum("bd,dhp->bhp", h, p["w_v"])
+    ig = jax.nn.sigmoid(jnp.einsum("bd,dh->bh", h, p["w_ig"])
+                        .astype(jnp.float32))
+    fg = -jax.nn.softplus(-(jnp.einsum("bd,dh->bh", h, p["w_fg"])
+                            .astype(jnp.float32) + p["fg_bias"]))
+    y, state = ssm.linear_attention_step(state, q, k, v, fg, ig,
+                                         normalize=True)
+    y = _head_rms(y, p["out_norm"])
+    out = jnp.einsum("bhp,hpd->bd", y.astype(x.dtype), p["w_o"])
+    return x + out[:, None], state
+
+
+def slstm_mixer_seq(cfg: ModelConfig, mesh, p, x, *, state_in=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    Ph = d // H
+    h = rms_norm(x, p["ln"])
+    gates = (jnp.einsum("bsd,dghp->bsghp", h, p["w_in"])
+             + p["b"]).astype(jnp.float32)
+    hs, state = ssm.slstm_scan(gates, p["r"], state_in)
+    out = hs.reshape(B, S, d).astype(x.dtype) @ p["w_o"]
+    return x + out, state
+
+
+def slstm_mixer_step(cfg: ModelConfig, mesh, p, x, state):
+    y, state = slstm_mixer_seq(cfg, mesh, p, x, state_in=state)
+    return y, state
+
+
+# ------------------------------------------------------------------ caches
+def _kv_cache_shape(cfg, B, Sc, n_layers):
+    K, hd = cfg.num_kv_heads, cfg.head_dim_
+    return (n_layers, B, Sc, K, hd)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int) -> Params:
+    """Zeroed decode cache.  ``cache_len`` is the KV capacity (== sliding
+    window when cfg.sliding_window > 0); recurrent archs carry O(1) state."""
+    lay = model_layout(cfg)
+    B = batch_size
+    dt = _dtype(cfg)
+    Sc = min(cache_len, cfg.sliding_window) if cfg.sliding_window \
+        else cache_len
+    c: Params = {"pos": jnp.zeros((), jnp.int32)}
+    if lay.kind in ("uniform", "encdec"):
+        c["k"] = jnp.zeros(_kv_cache_shape(cfg, B, Sc, cfg.num_layers), dt)
+        c["v"] = jnp.zeros_like(c["k"])
+        c["kv_pos"] = jnp.full((Sc,), -1, jnp.int32)
+    if lay.kind == "encdec":
+        H, hd = cfg.num_heads, cfg.head_dim_
+        c["ck"] = jnp.zeros((cfg.num_layers, B, cfg.encoder_seq, H, hd), dt)
+        c["cv"] = jnp.zeros_like(c["ck"])
+    if lay.kind == "zamba":
+        g, per = model_layout(cfg).groups, model_layout(cfg).per_group
+        n = g * per
+        H, Ph, N, W = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, \
+            cfg.conv_width
+        c["conv_x"] = jnp.zeros((n, B, W - 1, H * Ph), dt)
+        c["conv_B"] = jnp.zeros((n, B, W - 1, N), dt)
+        c["conv_C"] = jnp.zeros((n, B, W - 1, N), dt)
+        c["state"] = jnp.zeros((n, B, H, N, Ph), jnp.float32)
+        c["k"] = jnp.zeros(_kv_cache_shape(cfg, B, Sc, g), dt)
+        c["v"] = jnp.zeros_like(c["k"])
+        c["kv_pos"] = jnp.full((Sc,), -1, jnp.int32)
+    if lay.kind == "xlstm":
+        g, per = model_layout(cfg).groups, model_layout(cfg).per_group
+        H = cfg.num_heads
+        Ph = cfg.d_model // H
+        c["mstate"] = jnp.zeros((g * (per - 1), B, H, Ph, Ph + 1),
+                                jnp.float32)
+        for k_ in ("sc", "sn", "sh", "sm"):
+            c[k_] = jnp.zeros((g, B, H, Ph), jnp.float32)
+    return c
+
+
+def cache_specs(cfg: ModelConfig, mesh: Optional[Mesh],
+                batch_size: int = 0) -> Params:
+    if mesh is None:
+        dummy = init_cache(cfg, 1, 8)
+        return jax.tree_util.tree_map(lambda _: P(), dummy)
+    dp = _dp_for(mesh, batch_size) if batch_size else _dp_axes(mesh)
+    tpK = _tp(cfg, mesh, cfg.num_kv_heads)
+    tpH = _tp(cfg, mesh, cfg.num_heads)
+    tpHs = _tp(cfg, mesh, cfg.ssm_heads)
+    lay = model_layout(cfg)
+    c: Params = {"pos": P()}
+    if lay.kind in ("uniform", "encdec", "zamba"):
+        if resolve_kv_mode(cfg, mesh) == "sequence":
+            c["k"] = P(None, dp, "model", None, None)
+            c["v"] = P(None, dp, "model", None, None)
+        else:
+            c["k"] = P(None, dp, None, tpK, None)
+            c["v"] = P(None, dp, None, tpK, None)
+        c["kv_pos"] = P(None)
+    if lay.kind == "encdec":
+        c["ck"] = P(None, dp, None, tpH, None)
+        c["cv"] = P(None, dp, None, tpH, None)
+    if lay.kind == "zamba":
+        c["conv_x"] = P(None, dp, None, tpHs)
+        c["conv_B"] = P(None, dp, None, None)
+        c["conv_C"] = P(None, dp, None, None)
+        c["state"] = P(None, dp, tpHs, None, None)
+    if lay.kind == "xlstm":
+        c["mstate"] = P(None, dp, tpH, None, None)
+        for k_ in ("sc", "sn", "sh", "sm"):
+            c[k_] = P(None, dp, tpH, None)
+    return c
+
+
+# ------------------------------------------------------------------- model
+class Model:
+    """Pure-functional multi-architecture LM.  All public entry points take
+    the params pytree explicitly and are jit/lower-able."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Optional[Mesh] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.layout = model_layout(cfg)
+
+    # ------------------------------------------------------------ embedding
+    def _embed(self, params: Params, batch: Dict[str, jax.Array]):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.num_patch_tokens:
+            vis = batch["patches"].astype(x.dtype) @ params["vis_proj"]
+            x = jnp.concatenate([vis, x], axis=1)
+        x = _shard(x, self.mesh, _dp_for(self.mesh, x.shape[0]), None, None)
+        return x
+
+    # --------------------------------------------------------------- stacks
+    def _encoder(self, params: Params, frames: jax.Array) -> jax.Array:
+        """Whisper encoder on stub frame embeddings [B, Senc, d]."""
+        cfg = self.cfg
+        pos = jnp.arange(cfg.encoder_seq)
+        x = frames.astype(_dtype(cfg)) @ params["frame_proj"]
+
+        def body(carry, pl):
+            x, aux = carry
+            x, _, a = attn_mixer_seq(cfg, self.mesh, pl, x, pos,
+                                     causal=False)
+            return (x, aux + a), 0.0
+
+        (x, _), _ = _lscan(body, (x, jnp.float32(0.0)),
+                             params["encoder"])
+        return x
+
+    def _cross_kv_all(self, params: Params, enc_out: jax.Array):
+        """Per-decoder-layer cross K/V, stacked [L,B,Senc,H,hd]."""
+        bl = params["blocks"]
+        ck = jnp.einsum("bsd,ldhk->lbshk", enc_out, bl["wk_x"])
+        cv = jnp.einsum("bsd,ldhk->lbshk", enc_out, bl["wv_x"])
+        return ck, cv
+
+    def _seq_stack(self, params: Params, x: jax.Array, positions, *,
+                   want_cache: bool, window: int, cross_kv=None,
+                   remat: bool = False):
+        """Run the full depth on a full sequence.  Returns
+        (x, aux, cache_pieces dict of stacked ys)."""
+        cfg, mesh, lay = self.cfg, self.mesh, self.layout
+
+        if lay.kind in ("uniform", "encdec"):
+            def body(carry, xs):
+                x, aux = carry
+                if cross_kv is not None:
+                    pl, ckv = xs
+                else:
+                    pl, ckv = xs, None
+                x, kv, a = attn_mixer_seq(
+                    cfg, mesh, pl, x, positions, causal=True, window=window,
+                    cross_kv=ckv, want_kv=want_cache)
+                ys = {"k": kv[0], "v": kv[1]} if want_cache else {}
+                return (x, aux + a), ys
+
+            if remat:
+                body = jax.checkpoint(body)
+            xs = (params["blocks"], cross_kv) if cross_kv is not None \
+                else params["blocks"]
+            (x, aux), ys = _lscan(body, (x, jnp.float32(0.0)), xs)
+            return x, aux, ys
+
+        if lay.kind == "zamba":
+            g, per = lay.groups, lay.per_group
+            mam = jax.tree_util.tree_map(
+                lambda a: a.reshape((g, per) + a.shape[1:]), params["mamba"])
+            shared = params["shared_attn"]
+
+            def inner(carry, pl):
+                x = carry
+                x, (convs, st) = mamba_mixer_seq(cfg, mesh, pl, x)
+                ys = {"conv_x": convs[0], "conv_B": convs[1],
+                      "conv_C": convs[2], "state": st} if want_cache else {}
+                return x, ys
+
+            def outer(carry, mg):
+                x, aux = carry
+                x, m_ys = _lscan(inner, x, mg)
+                x, kv, a = attn_mixer_seq(
+                    cfg, mesh, shared, x, positions, causal=True,
+                    window=window, want_kv=want_cache)
+                ys = dict(m_ys)
+                if want_cache:
+                    ys["k"], ys["v"] = kv
+                return (x, aux + a), ys
+
+            if remat:
+                outer = jax.checkpoint(outer)
+            (x, aux), ys = _lscan(outer, (x, jnp.float32(0.0)), mam)
+            if want_cache:   # flatten [g, per, ...] -> [g*per, ...]
+                for k_ in ("conv_x", "conv_B", "conv_C", "state"):
+                    ys[k_] = ys[k_].reshape((-1,) + ys[k_].shape[2:])
+            return x, aux, ys
+
+        if lay.kind == "xlstm":
+            g, per = lay.groups, lay.per_group
+            ml = jax.tree_util.tree_map(
+                lambda a: a.reshape((g, per - 1) + a.shape[1:]),
+                params["mlstm"])
+
+            def inner(carry, pl):
+                x = carry
+                x, st = mlstm_mixer_seq(cfg, mesh, pl, x)
+                return x, ({"mstate": st} if want_cache else {})
+
+            def outer(carry, xs):
+                x, aux = carry
+                mg, sl = xs
+                x, m_ys = _lscan(inner, x, mg)
+                x, sstate = slstm_mixer_seq(cfg, mesh, sl, x)
+                ys = dict(m_ys)
+                if want_cache:
+                    ys["sc"], ys["sn"], ys["sh"], ys["sm"] = sstate
+                return (x, aux), ys
+
+            if remat:
+                outer = jax.checkpoint(outer)
+            (x, aux), ys = _lscan(outer, (x, jnp.float32(0.0)),
+                                    (ml, params["slstm"]))
+            if want_cache:
+                ys["mstate"] = ys["mstate"].reshape(
+                    (-1,) + ys["mstate"].shape[2:])
+            return x, aux, ys
+
+        raise ValueError(lay.kind)
+
+    # ---------------------------------------------------------------- loss
+    def _chunked_ce(self, params: Params, x: jax.Array, labels: jax.Array,
+                    mask: jax.Array, chunk: int = 1024):
+        """Cross-entropy without materialising [B,S,V]: scan over sequence
+        chunks, projecting to the (model-sharded) vocab per chunk."""
+        cfg = self.cfg
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        B, S, d = x.shape
+        n = -(-S // chunk)
+        pad = n * chunk - S
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)))
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        xc = x.reshape(B, n, chunk, d).swapaxes(0, 1)
+        lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+        mc = mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+        vmask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+
+        def step(carry, inp):
+            tot, cnt = carry
+            xi, li, mi = inp
+            logits = (xi @ head).astype(jnp.float32)
+            logits = jnp.where(vmask, -1e30, logits)
+            logits = _shard(logits, self.mesh,
+                            _dp_for(self.mesh, logits.shape[0]), None,
+                            _tp(cfg, self.mesh, cfg.padded_vocab))
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, li[..., None],
+                                       axis=-1)[..., 0]
+            nll = (lse - gold) * mi
+            return (tot + nll.sum(), cnt + mi.sum()), None
+
+        (tot, cnt), _ = _lscan(step, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (xc, lc, mc))
+        return tot / jnp.maximum(cnt, 1.0)
+
+    # ------------------------------------------------------------ training
+    def loss_fn(self, params: Params, batch: Dict[str, jax.Array],
+                remat: bool = True):
+        """Next-token LM loss (+ MoE aux).  Returns (loss, metrics)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.arange(S)
+        cross_kv = None
+        if self.layout.kind == "encdec":
+            enc = self._encoder(params, batch["frames"])
+            ck, cv = self._cross_kv_all(params, enc)
+            cross_kv = (ck, cv)
+        x, aux, _ = self._seq_stack(params, x, positions, want_cache=False,
+                                    window=cfg.sliding_window,
+                                    cross_kv=cross_kv, remat=remat)
+        x = rms_norm(x, params["final_norm"])
+        tokens = batch["tokens"]
+        n_text = tokens.shape[1]
+        x_text = x[:, -n_text:]                      # skip patch positions
+        labels = tokens[:, 1:]
+        mask = jnp.ones_like(labels, jnp.float32)
+        ce = self._chunked_ce(params, x_text[:, :-1], labels, mask)
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------- serving
+    def prefill(self, params: Params, batch: Dict[str, jax.Array],
+                cache_len: Optional[int] = None):
+        """Run the prompt, build the decode cache, return last-token logits."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S, _ = x.shape
+        Sc = min(cache_len or S, cfg.sliding_window) if cfg.sliding_window \
+            else (cache_len or S)
+        positions = jnp.arange(S)
+        cross_kv = None
+        cache: Params = {"pos": jnp.int32(S)}
+        if self.layout.kind == "encdec":
+            enc = self._encoder(params, batch["frames"])
+            ck, cv = self._cross_kv_all(params, enc)
+            cross_kv = (ck, cv)
+            cache["ck"], cache["cv"] = ck, cv
+        x, aux, ys = self._seq_stack(params, x, positions, want_cache=True,
+                                     window=cfg.sliding_window,
+                                     cross_kv=cross_kv, remat=False)
+        # ---- assemble the fixed-capacity cache from the per-layer ys
+        if "k" in ys:
+            k_full, v_full = ys["k"], ys["v"]        # [L,B,S,K,hd]
+            if S >= Sc:     # keep the last Sc positions (sliding window)
+                cache["k"] = k_full[:, :, S - Sc:]
+                cache["v"] = v_full[:, :, S - Sc:]
+                cache["kv_pos"] = positions[S - Sc:].astype(jnp.int32)
+            else:
+                pad = Sc - S
+                cache["k"] = jnp.pad(k_full, ((0, 0), (0, 0), (0, pad),
+                                              (0, 0), (0, 0)))
+                cache["v"] = jnp.pad(v_full, ((0, 0), (0, 0), (0, pad),
+                                              (0, 0), (0, 0)))
+                cache["kv_pos"] = jnp.pad(positions.astype(jnp.int32),
+                                          (0, pad), constant_values=-1)
+        for k_ in ("conv_x", "conv_B", "conv_C", "state", "mstate",
+                   "sc", "sn", "sh", "sm"):
+            if k_ in ys:
+                cache[k_] = ys[k_]
+        x = rms_norm(x, params["final_norm"])
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        logits = (x[:, -1:] @ head).astype(jnp.float32)
+        logits = jnp.where(jnp.arange(cfg.padded_vocab) >= cfg.vocab_size,
+                           -1e30, logits)
+        return logits[:, 0, :cfg.vocab_size], cache
+
+    def decode_step(self, params: Params, cache: Params,
+                    tokens: jax.Array):
+        """One token for every sequence in the batch.  tokens [B] int32."""
+        cfg, mesh, lay = self.cfg, self.mesh, self.layout
+        pos = cache["pos"]
+        x = jnp.take(params["embed"], tokens[:, None], axis=0)
+        new_cache = dict(cache)
+        aux_total = jnp.float32(0.0)
+
+        if lay.kind in ("uniform", "encdec", "zamba"):
+            Sc = cache["k"].shape[2]
+            slot = (pos % Sc) if cfg.sliding_window else jnp.minimum(
+                pos, Sc - 1)
+            kv_pos = cache["kv_pos"].at[slot].set(pos)
+            mask1 = (kv_pos >= 0) & (kv_pos <= pos)
+            if cfg.sliding_window:
+                mask1 &= kv_pos > pos - cfg.sliding_window
+            B = x.shape[0]
+            mask = jnp.broadcast_to(mask1[None], (B, Sc))
+            new_cache["kv_pos"] = kv_pos
+
+        if lay.kind in ("uniform", "encdec"):
+            cross = None
+            if lay.kind == "encdec":
+                cross = (cache["ck"], cache["cv"])
+
+            kv_mode = resolve_kv_mode(cfg, mesh)
+
+            def body(carry, xs):
+                x, aux = carry
+                if cross is not None:
+                    pl, kc, vc, ckl, cvl = xs
+                    ckv = (ckl, cvl)
+                else:
+                    pl, kc, vc = xs
+                    ckv = None
+                x, kc, vc, a = attn_mixer_step(cfg, mesh, pl, x, kc, vc,
+                                               mask, slot, pos, cross_kv=ckv,
+                                               kv_mode=kv_mode)
+                return (x, aux + a), {"k": kc, "v": vc}
+
+            xs = (params["blocks"], cache["k"], cache["v"]) if cross is None \
+                else (params["blocks"], cache["k"], cache["v"],
+                      cache["ck"], cache["cv"])
+            (x, aux_total), ys = _lscan(body, (x, aux_total), xs)
+            new_cache["k"], new_cache["v"] = ys["k"], ys["v"]
+
+        elif lay.kind == "zamba":
+            g, per = lay.groups, lay.per_group
+            mam = jax.tree_util.tree_map(
+                lambda a: a.reshape((g, per) + a.shape[1:]), params["mamba"])
+            st = {k_: cache[k_].reshape((g, per) + cache[k_].shape[1:])
+                  for k_ in ("conv_x", "conv_B", "conv_C", "state")}
+            shared = params["shared_attn"]
+
+            def inner(carry, xs):
+                x = carry
+                pl, cx, cb, cc, s0 = xs
+                x, (s1, convs) = mamba_mixer_step(cfg, mesh, pl, x, s0,
+                                                  (cx, cb, cc))
+                return x, {"conv_x": convs[0], "conv_B": convs[1],
+                           "conv_C": convs[2], "state": s1}
+
+            def outer(carry, xs):
+                x, aux = carry
+                mg, stg, kc, vc = xs
+                x, m_ys = _lscan(
+                    inner, x, (mg, stg["conv_x"], stg["conv_B"],
+                               stg["conv_C"], stg["state"]))
+                x, kc, vc, a = attn_mixer_step(
+                    cfg, mesh, shared, x, kc, vc, mask, slot, pos,
+                    kv_mode=resolve_kv_mode(cfg, mesh))
+                m_ys["k"], m_ys["v"] = kc, vc
+                return (x, aux + a), m_ys
+
+            (x, aux_total), ys = _lscan(
+                outer, (x, aux_total), (mam, st, cache["k"], cache["v"]))
+            for k_ in ("conv_x", "conv_B", "conv_C", "state"):
+                new_cache[k_] = ys[k_].reshape((-1,) + ys[k_].shape[2:])
+            new_cache["k"], new_cache["v"] = ys["k"], ys["v"]
+
+        elif lay.kind == "xlstm":
+            g, per = lay.groups, lay.per_group
+            ml = jax.tree_util.tree_map(
+                lambda a: a.reshape((g, per - 1) + a.shape[1:]),
+                params["mlstm"])
+            mstate = cache["mstate"].reshape(
+                (g, per - 1) + cache["mstate"].shape[1:])
+
+            def inner(carry, xs):
+                x = carry
+                pl, s0 = xs
+                x, s1 = mlstm_mixer_step(cfg, mesh, pl, x, s0)
+                return x, {"mstate": s1}
+
+            def outer(carry, xs):
+                x, aux = carry
+                mg, ms, sl, sst = xs
+                x, m_ys = _lscan(inner, x, (mg, ms))
+                x, s_new = slstm_mixer_step(cfg, mesh, sl, x, sst)
+                m_ys.update({"sc": s_new[0], "sn": s_new[1],
+                             "sh": s_new[2], "sm": s_new[3]})
+                return (x, aux), m_ys
+
+            sstates = (cache["sc"], cache["sn"], cache["sh"], cache["sm"])
+            (x, aux_total), ys = _lscan(
+                outer, (x, aux_total),
+                (ml, mstate, params["slstm"], sstates))
+            new_cache["mstate"] = ys["mstate"].reshape(
+                (-1,) + ys["mstate"].shape[2:])
+            for k_ in ("sc", "sn", "sh", "sm"):
+                new_cache[k_] = ys[k_]
+
+        x = rms_norm(x, params["final_norm"])
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        logits = (x @ head).astype(jnp.float32)[:, 0]
+        logits = jnp.where(jnp.arange(cfg.padded_vocab) >= cfg.vocab_size,
+                           -1e30, logits)
+        new_cache["pos"] = pos + 1
+        return logits[:, :cfg.vocab_size], new_cache

@@ -1,0 +1,19 @@
+"""Runtime analysis flags.
+
+XLA's HloCostAnalysis counts a while-loop (lax.scan) body ONCE, not
+multiplied by the trip count, so FLOPs/bytes/collectives inside the layer
+and chunk scans are undercounted by the trip count.  For the roofline
+analysis pass the dry-run re-lowers the model with these scans UNROLLED
+(`UNROLL_SCANS = True`), which makes cost_analysis and the HLO collective
+census exact.  The deployable artifact (and memory_analysis) always uses the
+rolled scans.  The sLSTM time scan is never unrolled (S can be 500k); its
+FLOPs are a negligible slice of xLSTM and the residual undercount is noted
+in EXPERIMENTS.md.
+"""
+
+UNROLL_SCANS = False
+
+
+def scan_unroll():
+    """Value for lax.scan(unroll=...): 1 (rolled) or True (fully unrolled)."""
+    return True if UNROLL_SCANS else 1

@@ -1,0 +1,181 @@
+"""Recurrent mixers: Mamba2 (SSD), mLSTM, sLSTM.
+
+Both Mamba2 and mLSTM are instances of one primitive — *chunked linear
+attention with per-step decay*:
+
+    state_t = exp(log_decay_t) · state_{t-1} + in_scale_t · k_t ⊗ v_t
+    y_t     = q_t · state_t
+
+Mamba2 maps (q,k,v,log_decay,in_scale) = (C, B, x, Δt·A, Δt) with B/C shared
+across heads; mLSTM maps them to (q, k, v, log σ(f), σ(i)) with an extra
+normaliser row (implemented by appending a ones-column to v).  The chunked
+evaluation (intra-chunk quadratic + inter-chunk state scan) keeps peak memory
+at O(S·chunk·H) — the same working-set-vs-schedule trade the paper makes,
+applied to recurrence.  All decays are ≤ 0 in log space so every exp() here
+is bounded by 1 (numerically safe in bf16).
+
+sLSTM is a genuinely sequential scan (exponential gating with running max
+stabiliser), evaluated with lax.scan over time.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import runtime
+
+
+# ------------------------------------------------ chunked linear attention
+def chunked_linear_attention(
+        q: jax.Array, k: jax.Array, v: jax.Array,
+        log_decay: jax.Array, in_scale: jax.Array, *,
+        chunk: int = 128, normalize: bool = False,
+        state_in: Optional[jax.Array] = None,
+        ) -> Tuple[jax.Array, jax.Array]:
+    """q,k: [B,S,H,N]; v: [B,S,H,P]; log_decay, in_scale: [B,S,H].
+
+    Returns (y [B,S,H,P], final state [B,H,N,P(+1)]).
+    """
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    log_decay = log_decay.astype(f32)
+    in_scale = in_scale.astype(f32)
+    if normalize:
+        v = jnp.concatenate([v, jnp.ones((B, S, H, 1), f32)], axis=-1)
+    Pv = v.shape[-1]
+
+    nz = -(-S // chunk)
+    pad = nz * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+        in_scale = jnp.pad(in_scale, ((0, 0), (0, pad), (0, 0)))
+
+    def chunkify(a):
+        return a.reshape((B, nz, chunk) + a.shape[2:]).swapaxes(0, 1)
+
+    qz, kz, vz = chunkify(q), chunkify(k), chunkify(v)
+    ldz, isz = chunkify(log_decay), chunkify(in_scale)
+
+    state0 = state_in if state_in is not None \
+        else jnp.zeros((B, H, N, Pv), f32)
+    if normalize and state_in is not None and state_in.shape[-1] == P:
+        raise ValueError("state_in must include the normaliser column")
+
+    idx = jnp.arange(chunk)
+    causal = (idx[:, None] >= idx[None, :])          # j <= i
+
+    def step(state, inp):
+        qc, kc, vc, ldc, sc = inp                    # [B,c,H,*]
+        cum = jnp.cumsum(ldc, axis=1)                # [B,c,H]
+        # ---- intra-chunk: scores (q_i·k_j)·exp(cum_i-cum_j)·s_j, j<=i
+        att = jnp.einsum("bihn,bjhn->bhij", qc, kc)
+        dec = jnp.exp(jnp.clip(
+            cum.transpose(0, 2, 1)[:, :, :, None]
+            - cum.transpose(0, 2, 1)[:, :, None, :], -60.0, 0.0))
+        w = att * dec * sc.transpose(0, 2, 1)[:, :, None, :]
+        w = jnp.where(causal[None, None], w, 0.0)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", w, vc)
+        # ---- inter-chunk: carry-in state decayed to each position
+        y_inter = jnp.einsum("bihn,bhnp->bihp",
+                             qc * jnp.exp(cum)[..., None], state)
+        # ---- state update
+        tail = cum[:, -1:, :]                        # [B,1,H]
+        wj = jnp.exp(jnp.clip(tail - cum, -60.0, 0.0)) * sc   # [B,c,H]
+        state = state * jnp.exp(tail[:, 0, :])[..., None, None] \
+            + jnp.einsum("bjhn,bjhp,bjh->bhnp", kc, vc, wj)
+        return state, y_intra + y_inter
+
+    state, ys = lax.scan(step, state0, (qz, kz, vz, ldz, isz),
+                         unroll=runtime.scan_unroll())
+    y = ys.swapaxes(0, 1).reshape(B, nz * chunk, H, Pv)[:, :S]
+    if normalize:
+        y, denom = y[..., :P], y[..., P:]
+        y = y / jnp.maximum(jnp.abs(denom), 1.0)
+    return y, state
+
+
+def linear_attention_step(
+        state: jax.Array, q: jax.Array, k: jax.Array, v: jax.Array,
+        log_decay: jax.Array, in_scale: jax.Array, *,
+        normalize: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. q,k: [B,H,N]; v: [B,H,P]; gates: [B,H];
+    state: [B,H,N,P(+1)].  Returns (y [B,H,P], new state)."""
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    if normalize:
+        v = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), f32)], -1)
+    decay = jnp.exp(jnp.clip(log_decay.astype(f32), -60.0, 0.0))
+    state = state * decay[..., None, None] \
+        + in_scale.astype(f32)[..., None, None] \
+        * (k[..., :, None] * v[..., None, :])
+    y = jnp.einsum("bhn,bhnp->bhp", q, state)
+    if normalize:
+        P = y.shape[-1] - 1
+        y = y[..., :P] / jnp.maximum(jnp.abs(y[..., P:]), 1.0)
+    return y, state
+
+
+# ------------------------------------------------------------ causal conv1d
+def causal_conv1d(x: jax.Array, w: jax.Array,
+                  cache: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x [B,S,C]; w [W,C]; cache [B,W-1,C].
+    Returns (y [B,S,C], new cache [B,W-1,C])."""
+    W = w.shape[0]
+    B, S, C = x.shape
+    if cache is None:
+        cache = jnp.zeros((B, W - 1, C), x.dtype)
+    xc = jnp.concatenate([cache, x], axis=1)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for t in range(W):   # W is 4 — unrolled taps, no conv primitive needed
+        y = y + xc[:, t:t + S].astype(jnp.float32) * w[t].astype(jnp.float32)
+    new_cache = xc[:, -(W - 1):] if W > 1 else cache
+    return jax.nn.silu(y).astype(x.dtype), new_cache
+
+
+# --------------------------------------------------------------------- sLSTM
+def slstm_scan(x_gates: jax.Array, r: jax.Array,
+               state: Optional[Tuple[jax.Array, ...]] = None,
+               ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """sLSTM with exponential gating and max-stabiliser.
+
+    x_gates: [B,S,4,H,P] pre-activations (i, f, z, o) from the input path;
+    r: [4,H,P,P] per-head recurrent kernels.
+    Returns (h [B,S,H,P], final (c,n,h,m) state).
+    """
+    B, S, _, H, P = x_gates.shape
+    f32 = jnp.float32
+    if state is None:
+        zeros = jnp.zeros((B, H, P), f32)
+        state = (zeros, zeros + 1.0, zeros, zeros - 10.0)   # c, n, h, m
+
+    rr = r.astype(f32)
+
+    def step(carry, xt):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhp,ghpq->bghq", h, rr)           # [B,4,H,P]
+        pre = xt.astype(f32) + rec
+        i_p, f_p, z_p, o_p = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        log_i = i_p
+        log_f = -jax.nn.softplus(-f_p)                       # log sigmoid(f)
+        m_new = jnp.maximum(log_f + m, log_i)
+        i_g = jnp.exp(log_i - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        z = jnp.tanh(z_p)
+        o = jax.nn.sigmoid(o_p)
+        c = f_g * c + i_g * z
+        n = f_g * n + i_g
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n, h, m_new), h
+
+    xs = x_gates.swapaxes(0, 1)                              # [S,B,4,H,P]
+    state, hs = lax.scan(step, state, xs)
+    return hs.swapaxes(0, 1).astype(x_gates.dtype), state

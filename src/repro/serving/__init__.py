@@ -1,0 +1,3 @@
+from .engine import Request, RequestResult, ServingEngine
+
+__all__ = ["Request", "RequestResult", "ServingEngine"]

@@ -1,0 +1,76 @@
+"""Training step: loss + grad + AdamW, with optional gradient-accumulation
+microbatching and remat (activation checkpointing) inside the model stack.
+``make_train_step`` returns a function suitable for jax.jit with sharded
+in/out specs (built by the launcher).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model, init_params
+from .optimizer import AdamWState, adamw_init, adamw_update, cosine_lr
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def train_state_init(cfg: ModelConfig, key: jax.Array) -> TrainState:
+    params = init_params(cfg, key)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def make_train_step(model: Model, *, peak_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    microbatches: int = 1, remat: bool = True
+                    ) -> Callable[[TrainState, Dict[str, jax.Array]], Any]:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch, remat=remat)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            def micro(b):
+                return jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, b)
+
+            split = jax.tree_util.tree_map(
+                lambda a: a.reshape((microbatches,
+                                     a.shape[0] // microbatches)
+                                    + a.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                (l_sum, g_sum) = carry
+                (l, m), g = micro(mb)
+                g_sum = jax.tree_util.tree_map(jnp.add, g_sum, g)
+                return (l_sum + l, g_sum), m
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), ms = jax.lax.scan(
+                acc_step, (jnp.float32(0.0), zeros), split)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda a: a.mean(), ms)
+
+        lr = cosine_lr(state.opt.step, peak=peak_lr, warmup=warmup,
+                       total=total_steps)
+        params, opt, om = adamw_update(state.params, grads, state.opt, lr=lr)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        metrics["lr"] = lr
+        return TrainState(params, opt), metrics
+
+    return train_step

@@ -1,0 +1,91 @@
+"""DynamicAllocator + ArenaPlanner invariants (unit + property tests)."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ArenaPlanner, DynamicAllocator, schedule,
+                        static_plan_size, tensor_lifetimes)
+from repro.graphs import (figure1_graph, mobilenet_v1_graph,
+                          swiftnet_cell_graph)
+
+
+def test_dynamic_allocator_basic():
+    a = DynamicAllocator(capacity=100)
+    assert a.alloc("x", 40) == 0
+    assert a.alloc("y", 40) == 40
+    a.free("x")
+    # first fit reuses the hole
+    assert a.alloc("z", 30) == 0
+    assert a.high_water() == 80
+    a.defragment()
+    assert a.addresses["z"] == 0 and a.addresses["y"] == 30
+    assert a.high_water() == 70
+
+
+def test_dynamic_allocator_overflow():
+    a = DynamicAllocator(capacity=64)
+    a.alloc("x", 32)
+    a.alloc("y", 32)
+    with pytest.raises(MemoryError):
+        a.alloc("z", 1)
+
+
+def test_defrag_compacts_to_front():
+    a = DynamicAllocator()
+    for i in range(8):
+        a.alloc(f"t{i}", 16)
+    for i in range(0, 8, 2):
+        a.free(f"t{i}")
+    moved = a.defragment()
+    assert moved == 4 * 16  # t1,t3,t5,t7 all shift down
+    assert a.high_water() == 4 * 16
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=80, deadline=None)
+def test_allocator_blocks_never_overlap(seed):
+    rng = random.Random(seed)
+    a = DynamicAllocator()
+    live = []
+    for k in range(60):
+        if live and rng.random() < 0.4:
+            t = live.pop(rng.randrange(len(live)))
+            a.free(t)
+        else:
+            name = f"t{k}"
+            a.alloc(name, rng.randint(1, 256))
+            live.append(name)
+        if rng.random() < 0.3:
+            a.defragment()
+        blocks = sorted(a.blocks, key=lambda b: b.offset)
+        for x, y in zip(blocks, blocks[1:]):
+            assert x.offset + x.size <= y.offset
+    # defrag leaves no gaps
+    a.defragment()
+    assert a.high_water() == a.live_bytes()
+
+
+@pytest.mark.parametrize("graph_fn", [figure1_graph, swiftnet_cell_graph,
+                                      mobilenet_v1_graph])
+def test_arena_plan_valid_and_tight(graph_fn):
+    g = graph_fn()
+    res = schedule(g)
+    plan = ArenaPlanner.plan(g, res.schedule)
+    ArenaPlanner.validate(plan)
+    # arena can never beat the schedule's working-set peak ...
+    assert plan.arena_size >= res.peak
+    # ... and best-fit should stay within 1.25x of it on these graphs
+    assert plan.arena_size <= int(res.peak * 1.25)
+    # and always beats the static everything-resident plan (+ inputs)
+    const_bytes = sum(g.size(c) for c in g.constants())
+    assert plan.arena_size <= static_plan_size(g) + const_bytes
+
+
+def test_lifetimes_cover_all_activations():
+    g = figure1_graph()
+    sched = g.default_schedule()
+    lt = dict((n, (s, e)) for n, s, e in tensor_lifetimes(g, sched))
+    assert lt["t0"] == (-1, 0)
+    assert lt["t1"] == (0, 3)   # produced by op1(step0), last used by op4
+    assert lt["t7"] == (6, 6)   # output pinned to the end

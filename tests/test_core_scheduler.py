@@ -1,0 +1,188 @@
+"""Validation of the paper's Algorithm 1 against its own published numbers
+(Figure 1 / Appendix A), plus property tests over random DAGs."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Graph, beam_schedule, greedy_schedule,
+                        minimise_peak_memory, minimise_peak_memory_contracted,
+                        schedule)
+from repro.graphs.figure1 import (DEFAULT_PEAK, OPTIMAL_PEAK, SIZES,
+                                  figure1_graph)
+
+
+# --------------------------------------------------------------- Figure 1 / 2
+def test_figure1_default_order_matches_paper_figure2():
+    g = figure1_graph()
+    sched = g.default_schedule()
+    # Appendix A, Figure 2 per-row working sets
+    expected_sets = [{"t0", "t1"}, {"t1", "t2"}, {"t1", "t2", "t3"},
+                     {"t1", "t3", "t4"}, {"t3", "t4", "t5"},
+                     {"t4", "t5", "t6"}, {"t5", "t6", "t7"}]
+    expected_usage = [4704, 4704, 5216, 4160, 1280, 1024, 1024]
+    sets = g.live_sets(sched)
+    assert [set(s) for s in sets] == expected_sets
+    assert g.usage_profile(sched) == expected_usage
+    assert g.peak_usage(sched) == DEFAULT_PEAK == 5216
+
+
+def test_figure1_optimal_order_matches_paper_figure3():
+    g = figure1_graph()
+    order = ["op1", "op4", "op6", "op2", "op3", "op5", "op7"]
+    sched = [g.op_by_name(n) for n in order]
+    assert g.is_valid_schedule(sched)
+    expected_sets = [{"t0", "t1"}, {"t1", "t4"}, {"t1", "t4", "t6"},
+                     {"t1", "t2", "t6"}, {"t2", "t3", "t6"},
+                     {"t3", "t5", "t6"}, {"t5", "t6", "t7"}]
+    expected_usage = [4704, 3648, 3904, 4960, 2336, 1024, 1024]
+    assert [set(s) for s in g.live_sets(sched)] == expected_sets
+    assert g.usage_profile(sched) == expected_usage
+    assert g.peak_usage(sched) == OPTIMAL_PEAK == 4960
+
+
+def test_algorithm1_finds_paper_optimum():
+    g = figure1_graph()
+    res = minimise_peak_memory(g)
+    assert res.peak == OPTIMAL_PEAK
+    assert g.is_valid_schedule(res.schedule)
+    assert g.peak_usage(res.schedule) == OPTIMAL_PEAK
+
+
+def test_contracted_dp_matches_exact_on_figure1():
+    g = figure1_graph()
+    res = minimise_peak_memory_contracted(g)
+    assert res is not None
+    assert res.peak == OPTIMAL_PEAK
+
+
+def test_schedule_api_on_figure1():
+    g = figure1_graph()
+    res = schedule(g)
+    assert res.peak == OPTIMAL_PEAK
+
+
+# ----------------------------------------------------------------- generators
+def random_dag(seed: int, n_ops: int) -> Graph:
+    rng = random.Random(seed)
+    g = Graph()
+    g.add_tensor("in", rng.randint(1, 100) * 16)
+    produced = ["in"]
+    for k in range(n_ops):
+        out = f"a{k}"
+        g.add_tensor(out, rng.randint(1, 100) * 16)
+        n_in = rng.randint(1, min(2, len(produced)))
+        ins = rng.sample(produced, n_in)
+        g.add_operator(f"op{k}", ins, out)
+        produced.append(out)
+    # outputs: every tensor with no consumer
+    sinks = [t for t in g.tensors
+             if not g.consumers(t) and g.producer(t) is not None]
+    g.set_outputs(sinks or [produced[-1]])
+    return g
+
+
+@given(st.integers(0, 10_000), st.integers(1, 9))
+@settings(max_examples=60, deadline=None)
+def test_exact_is_lower_bound_over_random_topo_orders(seed, n_ops):
+    g = random_dag(seed, n_ops)
+    res = minimise_peak_memory(g)
+    assert g.is_valid_schedule(res.schedule)
+    assert g.peak_usage(res.schedule) == res.peak
+    # exact optimum <= any sampled topological order (incl. insertion order)
+    assert res.peak <= g.peak_usage(g.default_schedule())
+    rng = random.Random(seed + 1)
+    for _ in range(10):
+        order = topo_sample(g, rng)
+        assert g.is_valid_schedule(order)
+        assert res.peak <= g.peak_usage(order)
+
+
+def topo_sample(g: Graph, rng: random.Random):
+    pending = list(g.operators)
+    produced = set()
+    out = []
+    while pending:
+        ready = [op for op in pending
+                 if all(i in produced or g.producer(i) is None
+                        for i in op.inputs)]
+        op = rng.choice(ready)
+        pending.remove(op)
+        produced.add(op.output)
+        out.append(op)
+    return out
+
+
+@given(st.integers(0, 10_000), st.integers(1, 10))
+@settings(max_examples=60, deadline=None)
+def test_heuristics_valid_and_bounded_by_exact(seed, n_ops):
+    g = random_dag(seed, n_ops)
+    exact = minimise_peak_memory(g)
+    for r in (greedy_schedule(g), beam_schedule(g, width=16)):
+        assert g.is_valid_schedule(r.schedule)
+        assert g.peak_usage(r.schedule) == r.peak
+        assert r.peak >= exact.peak
+
+
+@given(st.integers(0, 10_000), st.integers(1, 12))
+@settings(max_examples=40, deadline=None)
+def test_contracted_dp_valid_and_bounded(seed, n_ops):
+    """Chain contraction restricts chains to run contiguously, so it is an
+    upper bound on the true optimum (and equals it on most graphs)."""
+    g = random_dag(seed, n_ops)
+    exact = minimise_peak_memory(g)
+    contracted = minimise_peak_memory_contracted(g)
+    assert contracted is not None
+    assert g.is_valid_schedule(contracted.schedule)
+    assert g.peak_usage(contracted.schedule) == contracted.peak
+    assert contracted.peak >= exact.peak
+
+
+@given(st.integers(0, 10_000), st.integers(1, 14))
+@settings(max_examples=40, deadline=None)
+def test_schedule_api_never_worse_than_embedded_order(seed, n_ops):
+    g = random_dag(seed, n_ops)
+    res = schedule(g)
+    assert g.is_valid_schedule(res.schedule)
+    assert res.peak <= g.peak_usage(g.default_schedule())
+
+
+@given(st.integers(0, 10_000), st.integers(1, 10))
+@settings(max_examples=30, deadline=None)
+def test_branch_and_bound_preserves_optimum(seed, n_ops):
+    g = random_dag(seed, n_ops)
+    exact = minimise_peak_memory(g)
+    ub = greedy_schedule(g).peak
+    bounded = minimise_peak_memory(g, upper_bound=ub + 1)
+    assert bounded.peak == exact.peak
+
+
+def test_beam_finds_optimum_on_figure1():
+    g = figure1_graph()
+    assert beam_schedule(g, width=64).peak == OPTIMAL_PEAK
+
+
+def test_inplace_accumulation_paper_s6_extension():
+    """Paper §6: 'if one of the inputs to the addition operator is not used
+    elsewhere, the result can be accumulated into it, eliminating the need
+    for an output buffer.'"""
+    def build(inplace):
+        g = Graph()
+        for n, sz in (("x", 10), ("a", 100), ("b", 100), ("y", 100)):
+            g.add_tensor(n, sz)
+        g.add_operator("opA", ["x"], "a")
+        g.add_operator("opB", ["x"], "b")
+        g.add_operator("add", ["a", "b"], "y",
+                       **({"inplace": True} if inplace else {}))
+        g.set_outputs(["y"])
+        return g
+
+    plain = build(False)
+    acc = build(True)
+    sched = plain.default_schedule()
+    # peak at `add`: {a, b, y} = 300 without the trick; with accumulation
+    # the output reuses a dying input, so the peak moves to opB (x,a,b=210)
+    assert plain.peak_usage(sched) == 300
+    assert acc.peak_usage(acc.default_schedule()) == 210
+    # the optimum also benefits
+    assert minimise_peak_memory(acc).peak <= minimise_peak_memory(plain).peak

@@ -1,0 +1,63 @@
+"""Dry-run harness: shape policy logic (pure) + one end-to-end subprocess
+lowering on the production mesh (the full 40×2 sweep runs via
+`python -m repro.launch.dryrun`; its artifacts feed EXPERIMENTS.md)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.shapes import (SHAPES, config_for_shape, shape_applicable)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_shape_policy():
+    # whisper skips long_500k; everything else runs everything
+    assert not shape_applicable(get_config("whisper-large-v3"), "long_500k")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if arch == "whisper-large-v3" and shape == "long_500k":
+                continue
+            assert shape_applicable(cfg, shape)
+
+
+def test_long500k_gets_sliding_window_for_attention_archs():
+    for arch in ("llama3.2-3b", "qwen2-7b", "glm4-9b", "phi3-medium-14b",
+                 "internvl2-1b", "phi3.5-moe-42b-a6.6b"):
+        cfg = config_for_shape(get_config(arch), "long_500k")
+        assert cfg.sliding_window == 8192, arch
+    for arch in ("zamba2-2.7b", "xlstm-350m"):
+        cfg = config_for_shape(get_config(arch), "long_500k")
+        assert cfg.sliding_window == 0, arch   # native sub-quadratic
+
+
+def test_all_shapes_defined():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524_288
+
+
+@pytest.mark.slow
+def test_dryrun_end_to_end_subprocess():
+    """Lower+compile one cheap combo on the real 256-device mesh in a fresh
+    process (the 512-device XLA flag must be set before jax init)."""
+    with tempfile.TemporaryDirectory() as out:
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "xlstm-350m", "--shape", "decode_32k",
+             "--mesh", "single", "--no-unroll", "--out", out],
+            env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+            capture_output=True, text=True, timeout=560)
+        assert r.returncode == 0, r.stdout + r.stderr
+        f = os.path.join(out, "xlstm-350m__decode_32k__single.json")
+        rec = json.load(open(f))
+        assert rec["chips"] == 256
+        assert rec["memory_analysis"]["peak_memory_in_bytes"] > 0
+        assert rec["roofline"]["dominant"] in (
+            "compute_s", "memory_s", "collective_s")

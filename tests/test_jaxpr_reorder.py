@@ -1,0 +1,109 @@
+"""jaxpr-level operator reordering: validity, numerics-invariance, and that
+it actually reduces peak liveness on branchy JAX programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.jaxpr_reorder import (ReorderReport, peak_liveness,
+                                      jaxpr_to_graph, reorder,
+                                      reorder_closed_jaxpr)
+
+
+def branchy_fn(x):
+    """Figure-1-shaped JAX program: expensive branch traced first."""
+    t1 = jnp.tanh(x)                      # big
+    a = (t1 @ t1.T)                       # branch A: big intermediates
+    a = jnp.tanh(a)
+    a = a.sum(axis=1)
+    b = t1.sum(axis=1)                    # branch B: tiny
+    return a + b
+
+
+def test_reorder_reduces_peak_on_branchy_fn():
+    x = jnp.ones((128, 128), jnp.float32)
+    closed = jax.make_jaxpr(branchy_fn)(x)
+    new_closed, rep = reorder_closed_jaxpr(closed)
+    assert rep.peak_after <= rep.peak_before
+    # verify the rebuilt jaxpr's own liveness matches the report
+    assert peak_liveness(new_closed) == rep.peak_after
+
+
+def test_reorder_numerics_bit_identical():
+    x = np.random.default_rng(0).standard_normal((64, 64)).astype(np.float32)
+    expected = branchy_fn(jnp.asarray(x))
+    got = reorder(branchy_fn)(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(expected), np.asarray(got))
+
+
+def test_reorder_handles_multi_output_eqns():
+    def fn(x):
+        a, b = jnp.split(x, 2)
+        return jnp.tanh(a).sum() + b.sum()
+
+    x = jnp.ones((32, 8))
+    expected = fn(x)
+    got = reorder(fn)(x)
+    np.testing.assert_allclose(np.asarray(expected), np.asarray(got))
+
+
+def test_reorder_pytree_outputs():
+    def fn(x):
+        return {"a": x * 2, "b": (x + 1, x.sum())}
+
+    x = jnp.arange(12.0).reshape(3, 4)
+    expected = fn(x)
+    got = reorder(fn)(x)
+    jax.tree_util.tree_map(
+        lambda e, g: np.testing.assert_array_equal(np.asarray(e),
+                                                   np.asarray(g)),
+        expected, got)
+
+
+def test_shard_divisor_scales_sizes():
+    x = jnp.ones((128, 128), jnp.float32)
+    closed = jax.make_jaxpr(branchy_fn)(x)
+    p1 = peak_liveness(closed, shard_divisor=1)
+    p8 = peak_liveness(closed, shard_divisor=8)
+    assert p1 > p8 >= p1 // 8
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_random_programs_numerics_invariant(seed):
+    rng = np.random.default_rng(seed)
+
+    def fn(x):
+        vals = [x]
+        for k in range(6):
+            pick = vals[int(rng.integers(len(vals)))]
+            choice = int(rng.integers(4))
+            if choice == 0:
+                vals.append(jnp.tanh(pick))
+            elif choice == 1:
+                vals.append(pick * 1.5 + 1.0)
+            elif choice == 2:
+                other = vals[int(rng.integers(len(vals)))]
+                vals.append(pick + other)
+            else:
+                vals.append(pick.sum(keepdims=True) * jnp.ones_like(pick))
+        return sum(v.sum() for v in vals)
+
+    x = jnp.asarray(np.random.default_rng(seed + 1)
+                    .standard_normal((16, 16)).astype(np.float32))
+    expected = fn(x)           # rng consumed during first trace
+    rng = np.random.default_rng(seed)   # reset so retrace is identical
+    got = reorder(fn)(x)
+    np.testing.assert_allclose(np.asarray(expected), np.asarray(got),
+                               rtol=1e-6)
+
+
+def test_jaxpr_graph_shapes():
+    x = jnp.ones((8, 8))
+    closed = jax.make_jaxpr(branchy_fn)(x)
+    g, idx = jaxpr_to_graph(closed.jaxpr)
+    assert len(g.operators) == len(closed.jaxpr.eqns)
+    assert g.outputs  # has at least the function output
+    # every equation got a distinct index
+    assert sorted(idx.values()) == list(range(len(closed.jaxpr.eqns)))

@@ -1,0 +1,74 @@
+"""Micro-interpreter simulator: Table-1-style results + numerics invariance
+(reordering must not change model outputs — the paper's orthogonality claim)."""
+import numpy as np
+import pytest
+
+from repro.core import schedule, static_plan_size
+from repro.graphs import (figure1_graph, mobilenet_v1_graph,
+                          swiftnet_cell_graph)
+from repro.mcu import MicroInterpreter
+
+SRAM = 512 * 1024          # NUCLEO-F767ZI
+FRAMEWORK_OVERHEAD = 200 * 1024   # paper: ≈200KB for SwiftNet Cell
+
+
+def _inputs(g, seed=0):
+    h, w, c = g.tensors["input"].shape
+    rng = np.random.default_rng(seed)
+    return {"input": rng.standard_normal((h, w, c)).astype(np.float32)}
+
+
+def test_swiftnet_fits_only_with_optimised_order():
+    g = swiftnet_cell_graph()
+    default = g.default_schedule()
+    opt = schedule(g).schedule
+    budget = SRAM - FRAMEWORK_OVERHEAD
+    interp = MicroInterpreter(g, capacity=budget)
+    x = _inputs(g)
+    # default order must NOT fit the remaining SRAM budget ...
+    with pytest.raises(MemoryError):
+        interp.run(x, schedule=default)
+    # ... while the optimised order does — the paper's headline result.
+    rep = interp.run(x, schedule=opt)
+    assert rep.fits
+    assert rep.peak_sram <= budget
+
+
+def test_reordering_is_output_invariant():
+    g = swiftnet_cell_graph()
+    x = _inputs(g)
+    interp = MicroInterpreter(g)
+    a = interp.run(x, schedule=g.default_schedule())
+    b = interp.run(x, schedule=schedule(g).schedule)
+    for o in g.outputs:
+        np.testing.assert_array_equal(a.outputs[o], b.outputs[o])
+
+
+def test_mobilenet_dynamic_vs_static_alloc():
+    """Table 1, MobileNet column: dynamic allocation slashes the footprint of
+    a pure-chain model where reordering alone cannot help."""
+    g = mobilenet_v1_graph()
+    static = static_plan_size(g)
+    rep = MicroInterpreter(g).run(_inputs(g))
+    assert rep.peak_sram == 55296            # 54 KB — paper reports 55 KB
+    assert static >= 4 * rep.peak_sram       # paper: 241 KB vs 55 KB
+    # defrag traffic exists but is bounded (the <1% overhead proxy)
+    assert rep.bytes_moved < 40 * static
+
+
+def test_figure1_interpreter_peaks_match_simulation():
+    g = figure1_graph()
+    # attach trivial semantics so the interpreter can run this graph
+    for op in g.operators:
+        if op.kind == "concat":
+            op.fn = lambda *xs: np.concatenate([x.ravel() for x in xs])
+        else:
+            size = g.size(op.output)
+            op.fn = (lambda s: lambda *xs: np.zeros(s, np.int8))(size)
+    x = {"t0": np.zeros(g.size("t0"), np.int8)}
+    rep_d = MicroInterpreter(g).run(x, schedule=g.default_schedule())
+    order = [g.op_by_name(n) for n in
+             ["op1", "op4", "op6", "op2", "op3", "op5", "op7"]]
+    rep_o = MicroInterpreter(g).run(x, schedule=order)
+    assert rep_d.peak_sram == 5216
+    assert rep_o.peak_sram == 4960

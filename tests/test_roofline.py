@@ -1,0 +1,62 @@
+"""Roofline machinery: HLO collective census + three-term report."""
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.roofline import (TPU_V5E, collective_bytes_from_hlo,
+                                     model_flops, roofline_report)
+from repro.configs import get_config
+
+HLO = """
+HloModule test
+%x1 = f32[1024,256]{1,0} all-gather(%a), channel_id=1, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+%x2 = bf16[512]{0} all-reduce(%b), replica_groups=[4,4]<=[16]
+%x3 = (f32[128]{0}, f32[2048]{0}) all-gather-start(%c), replica_groups=[1,16]<=[16]
+%x4 = f32[2048]{0} all-gather-done(%x3)
+%x5 = f32[256,64]{1,0} reduce-scatter(%d), replica_groups={{0,1,2,3}}, dimensions={0}
+%x6 = f32[64,64]{1,0} all-to-all(%e), replica_groups=[2,8]<=[16]
+%x7 = bf16[32]{0} collective-permute(%f), source_target_pairs={{0,1}}
+"""
+
+
+def test_collective_census():
+    out = collective_bytes_from_hlo(HLO)
+    # all-gather: 1024*256*4 * 15/16
+    assert out["all-gather"] == (1024 * 256 * 4) * 15 // 16 \
+        + (2048 * 4) * 15 // 16
+    # all-reduce: 2 * 512*2 * 3/4
+    assert out["all-reduce"] == 2 * 512 * 2 * 3 // 4
+    # reduce-scatter: result * (g-1), g=4
+    assert out["reduce-scatter"] == 256 * 64 * 4 * 3
+    assert out["all-to-all"] == 64 * 64 * 4 * 7 // 8
+    assert out["collective-permute"] == 32 * 2
+    assert out["total"] == sum(out[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_collective_census_ignores_non_collectives():
+    txt = "%y = f32[8]{0} add(f32[8] %a, f32[8] %b)\n"
+    assert collective_bytes_from_hlo(txt)["total"] == 0
+
+
+def test_roofline_dominant_term():
+    r = roofline_report(flops=197e12, bytes_accessed=819e9 * 2,
+                        collective_bytes=50e9 * 0.5)
+    # compute: 1s, memory: 2s, collective: 0.5s
+    assert r["dominant"] == "memory_s"
+    assert r["step_time_lb_s"] == pytest.approx(2.0)
+
+
+def test_roofline_mfu_bound():
+    r = roofline_report(flops=1e12, bytes_accessed=0.0, collective_bytes=0.0,
+                        model_flops_global=256e12, chips=256)
+    assert r["useful_flop_fraction"] == pytest.approx(1.0)
+    assert r["mfu_bound"] == pytest.approx(1.0)
+
+
+def test_model_flops_moe_uses_active_params():
+    moe = get_config("phi3.5-moe-42b-a6.6b")
+    dense_equiv = model_flops(moe, "train", 1000)
+    assert dense_equiv == 6.0 * moe.active_param_count() * 1000
+    # active ~6.6B << total ~42B
+    assert moe.active_param_count() < 0.25 * moe.param_count()

@@ -1,0 +1,118 @@
+"""Property tests for the recurrent substrate: the chunked linear-attention
+engine must equal the naive sequential recurrence for any chunk size, and
+decode steps must continue prefill states exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.ssm import (causal_conv1d, chunked_linear_attention,
+                              linear_attention_step, slstm_scan)
+
+
+def naive_linear_attention(q, k, v, log_decay, in_scale, normalize=False):
+    """Sequential reference: state_t = e^ld_t state + s_t k_t v_t^T."""
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    q, k, v = (np.asarray(a, np.float64) for a in (q, k, v))
+    ld = np.asarray(log_decay, np.float64)
+    sc = np.asarray(in_scale, np.float64)
+    if normalize:
+        v = np.concatenate([v, np.ones((B, S, H, 1))], -1)
+    state = np.zeros((B, H, N, v.shape[-1]))
+    ys = []
+    for t in range(S):
+        state = state * np.exp(ld[:, t])[..., None, None] \
+            + sc[:, t][..., None, None] * (k[:, t][..., :, None]
+                                           * v[:, t][..., None, :])
+        ys.append(np.einsum("bhn,bhnp->bhp", q[:, t], state))
+    y = np.stack(ys, 1)
+    if normalize:
+        y = y[..., :P] / np.maximum(np.abs(y[..., P:]), 1.0)
+    return y, state
+
+
+@given(st.integers(0, 1000), st.sampled_from([1, 2, 3, 5, 8, 16]),
+       st.booleans())
+@settings(max_examples=25, deadline=None)
+def test_chunked_equals_naive_recurrence(seed, chunk, normalize):
+    rng = np.random.default_rng(seed)
+    B, S, H, N, P = 2, 13, 3, 4, 5
+    q = rng.standard_normal((B, S, H, N)).astype(np.float32)
+    k = rng.standard_normal((B, S, H, N)).astype(np.float32)
+    v = rng.standard_normal((B, S, H, P)).astype(np.float32)
+    ld = -np.abs(rng.standard_normal((B, S, H))).astype(np.float32)
+    sc = rng.random((B, S, H)).astype(np.float32)
+    y, state = chunked_linear_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(ld),
+        jnp.asarray(sc), chunk=chunk, normalize=normalize)
+    y_ref, state_ref = naive_linear_attention(q, k, v, ld, sc, normalize)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), state_ref,
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_decode_step_continues_chunked_state(seed):
+    rng = np.random.default_rng(seed)
+    B, S, H, N, P = 1, 9, 2, 4, 4
+    mk = lambda *sh: jnp.asarray(rng.standard_normal(sh), jnp.float32)
+    q, k = mk(B, S + 1, H, N), mk(B, S + 1, H, N)
+    v = mk(B, S + 1, H, P)
+    ld = -jnp.abs(mk(B, S + 1, H))
+    sc = jnp.abs(mk(B, S + 1, H))
+    # full sequence in one chunked pass
+    y_full, _ = chunked_linear_attention(q, k, v, ld, sc, chunk=4)
+    # prefix pass + one decode step
+    y_pre, state = chunked_linear_attention(
+        q[:, :S], k[:, :S], v[:, :S], ld[:, :S], sc[:, :S], chunk=4)
+    y_step, _ = linear_attention_step(
+        state, q[:, S], k[:, S], v[:, S], ld[:, S], sc[:, S])
+    np.testing.assert_allclose(np.asarray(y_step),
+                               np.asarray(y_full[:, S]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_causal_conv1d_matches_explicit():
+    rng = np.random.default_rng(0)
+    B, S, C, W = 2, 10, 3, 4
+    x = jnp.asarray(rng.standard_normal((B, S, C)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((W, C)), jnp.float32)
+    y, cache = causal_conv1d(x, w)
+    xp = np.concatenate([np.zeros((B, W - 1, C)), np.asarray(x)], 1)
+    for t in range(S):
+        ref = sum(xp[:, t + i] * np.asarray(w)[i] for i in range(W))
+        ref = ref / (1 + np.exp(-ref))   # silu
+        np.testing.assert_allclose(np.asarray(y[:, t]), ref,
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cache), xp[:, -(W - 1):],
+                               rtol=0, atol=0)
+
+
+def test_causal_conv1d_cache_streaming():
+    """conv(x) == conv applied in two halves with the carried cache."""
+    rng = np.random.default_rng(1)
+    B, S, C, W = 1, 12, 2, 4
+    x = jnp.asarray(rng.standard_normal((B, S, C)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((W, C)), jnp.float32)
+    y_full, _ = causal_conv1d(x, w)
+    y1, c1 = causal_conv1d(x[:, :7], w)
+    y2, _ = causal_conv1d(x[:, 7:], w, cache=c1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-6, atol=1e-6)
+
+
+def test_slstm_stability_long_sequence():
+    """Exponential gating with the max-stabiliser must not overflow even
+    with large positive input-gate pre-activations."""
+    rng = np.random.default_rng(2)
+    B, S, H, P = 1, 64, 2, 4
+    gates = jnp.asarray(rng.standard_normal((B, S, 4, H, P)) * 8.0,
+                        jnp.float32)
+    r = jnp.asarray(rng.standard_normal((4, H, P, P)) * 0.2, jnp.float32)
+    h, state = slstm_scan(gates, r)
+    assert np.isfinite(np.asarray(h)).all()
+    assert np.isfinite(np.asarray(state[0])).all()
+    assert np.abs(np.asarray(h)).max() <= 1.5   # |o·c/n| bounded
