@@ -1,0 +1,78 @@
+"""Partial execution (Pex) benchmark: peak SRAM for {static allocation,
+reorder-only, reorder + partial execution} across the paper graphs, plus the
+headline capacity demos — models that fit a 512 KB (and a stretch 256 KB)
+arena with reorder+partial but **cannot** with reordering alone.
+
+Output rows (bytes):
+    pex.<graph>.static_B            all-tensors-resident planning
+    pex.<graph>.reorder_B           best reordered schedule, whole operators
+    pex.<graph>.reorder_partial_B   reordering over the partitioned graph
+    pex.<graph>.arena_plan_B        offline arena plan of the winning schedule
+
+The capacity demos execute both graphs through the micro-interpreter and
+assert bit-identical outputs — partial execution must not change numerics.
+"""
+import time
+
+import numpy as np
+
+from repro.core import ArenaPlanner, schedule, static_plan_size
+from repro.graphs import (figure1_graph, mobilenet_v1_graph,
+                          swiftnet_cell_graph)
+from repro.mcu import MicroInterpreter
+
+KB = 1024
+
+
+def _case(report, name, g, cap=None):
+    t0 = time.perf_counter()
+    base = schedule(g)
+    res = schedule(g, arena_budget=cap, partition=cap is None)
+    dt = (time.perf_counter() - t0) * 1e6
+    gp = res.graph if res.graph is not None else g
+    plan = ArenaPlanner.plan(gp, res.schedule)
+    ArenaPlanner.validate(plan)
+    report(f"pex.{name}.static_B", dt, static_plan_size(g))
+    report(f"pex.{name}.reorder_B", dt, base.peak)
+    report(f"pex.{name}.reorder_partial_B", dt, res.peak)
+    report(f"pex.{name}.arena_plan_B", dt, plan.arena_size)
+    return base, res, plan
+
+
+def _assert_bit_identical(g, res):
+    h, w, c = g.tensors["input"].shape
+    rng = np.random.default_rng(0)
+    x = {"input": rng.standard_normal((h, w, c)).astype(np.float32)}
+    ref = MicroInterpreter(g).run(x)
+    got = MicroInterpreter(res.graph).run(x, schedule=res.schedule)
+    for o in g.outputs:
+        np.testing.assert_array_equal(ref.outputs[o], got.outputs[o])
+    assert got.peak_sram == res.peak, (got.peak_sram, res.peak)
+
+
+def run(report):
+    # ---- the paper graphs: partial execution composes with reordering
+    _case(report, "figure1", figure1_graph())          # too small to slice
+    base, res, _ = _case(report, "mobilenet_025_96", mobilenet_v1_graph())
+    assert res.peak < base.peak, "pure chain: partial execution must win"
+    _case(report, "swiftnet_96", swiftnet_cell_graph())
+
+    # ---- headline: fits 512 KB only with reorder+partial ----------------
+    cap = 512 * KB
+    g = mobilenet_v1_graph(alpha=1.0, resolution=192)
+    base, res, plan = _case(report, "mobilenet_100_192", g, cap=cap)
+    assert base.peak > cap, "reorder-only must NOT fit 512 KB"
+    assert res.peak <= cap and plan.arena_size <= cap, "pex must fit 512 KB"
+    _assert_bit_identical(g, res)
+    report("pex.mobilenet_100_192.fits_512K", 0.0,
+           int(plan.arena_size <= cap))
+
+    # ---- stretch: 256 KB ------------------------------------------------
+    cap = 256 * KB
+    g = mobilenet_v1_graph(alpha=0.5, resolution=192)
+    base, res, plan = _case(report, "mobilenet_050_192", g, cap=cap)
+    assert base.peak > cap, "reorder-only must NOT fit 256 KB"
+    assert res.peak <= cap and plan.arena_size <= cap, "pex must fit 256 KB"
+    _assert_bit_identical(g, res)
+    report("pex.mobilenet_050_192.fits_256K", 0.0,
+           int(plan.arena_size <= cap))

@@ -6,7 +6,7 @@ import traceback
 
 def main() -> None:
     from . import (bench_figure1, bench_table1, bench_scheduler,
-                   bench_jaxpr, bench_kernels, bench_roofline)
+                   bench_jaxpr, bench_kernels, bench_pex, bench_roofline)
 
     rows = []
 
@@ -16,7 +16,7 @@ def main() -> None:
 
     failed = []
     for mod in (bench_figure1, bench_table1, bench_scheduler, bench_jaxpr,
-                bench_kernels, bench_roofline):
+                bench_pex, bench_kernels, bench_roofline):
         print(f"# --- {mod.__name__} ---", flush=True)
         try:
             mod.run(report)

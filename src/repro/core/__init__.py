@@ -5,7 +5,11 @@ from .scheduler import ScheduleResult, minimise_peak_memory
 from .heuristics import (beam_schedule, build_chains, greedy_schedule,
                          minimise_peak_memory_contracted, schedule)
 from .allocator import (ArenaPlan, ArenaPlanner, DynamicAllocator, Placement,
-                        static_plan_size, tensor_lifetimes)
+                        inplace_alias_groups, static_plan_size,
+                        tensor_lifetimes)
+from .partition import (PEX_ATTR, PartitionResult, Segment, SliceSpec,
+                        apply_partition, partition_graph, plan_partition,
+                        sliceable_runs)
 from . import profile
 
 __all__ = [
@@ -14,5 +18,8 @@ __all__ = [
     "beam_schedule", "build_chains", "greedy_schedule",
     "minimise_peak_memory_contracted", "schedule",
     "ArenaPlan", "ArenaPlanner", "DynamicAllocator", "Placement",
-    "static_plan_size", "tensor_lifetimes", "profile",
+    "inplace_alias_groups", "static_plan_size", "tensor_lifetimes",
+    "PEX_ATTR", "PartitionResult", "Segment", "SliceSpec",
+    "apply_partition", "partition_graph", "plan_partition",
+    "sliceable_runs", "profile",
 ]

@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .graph import Graph, Operator
+from .graph import Graph, Operator, inplace_candidates
 
 
 @dataclasses.dataclass
@@ -72,6 +72,19 @@ class DynamicAllocator:
                 return
         raise KeyError(tensor)
 
+    def rename(self, old: str, new: str) -> int:
+        """Hand ``old``'s block to ``new`` without moving memory — an
+        operator that wrote its output in place over a dead input (partial
+        execution's shared output buffer does this every slice)."""
+        if new in self.addresses:
+            raise ValueError(f"{new!r} already allocated")
+        for b in self.blocks:
+            if b.tensor == old:
+                b.tensor = new
+                self.addresses[new] = self.addresses.pop(old)
+                return b.offset
+        raise KeyError(old)
+
     def defragment(self) -> int:
         """Compact all live blocks to the start of the arena, preserving
         order.  Returns bytes moved (cost proxy)."""
@@ -118,6 +131,7 @@ class Placement:
     size: int
     start: int   # first step live (op index; -1 for graph inputs)
     end: int     # last step live (inclusive)
+    alias: Optional[str] = None   # shared-buffer group (inplace chains)
 
 
 @dataclasses.dataclass
@@ -156,23 +170,80 @@ def tensor_lifetimes(graph: Graph, schedule: Sequence[Operator],
     return out
 
 
+def inplace_alias_groups(graph: Graph, schedule: Sequence[Operator]
+                         ) -> Dict[str, str]:
+    """tensor -> representative for buffers shared through ``inplace``
+    operators (partial execution's incremental concat writes slice ``s`` into
+    the buffer that already holds slices ``0..s-1``).  Mirrors the condition
+    ``Graph.live_sets`` uses to charge the output buffer zero bytes: the
+    consumed input must die at that step and match the output size."""
+    n = len(schedule)
+    last_use: Dict[str, int] = {}
+    for t, op in enumerate(schedule):
+        for i in op.inputs:
+            last_use[i] = t
+    for o in graph.outputs:
+        last_use[o] = n            # pinned, never overwritten in place
+    parent: Dict[str, str] = {}
+
+    def find(x: str) -> str:
+        while parent.get(x, x) != x:
+            parent[x] = parent.get(parent[x], parent[x])
+            x = parent[x]
+        return x
+
+    for t, op in enumerate(schedule):
+        if not op.attrs.get("inplace"):
+            continue
+        for i in inplace_candidates(op):
+            if (graph.producer(i) is not None
+                    and graph.size(i) == graph.size(op.output)
+                    and last_use.get(i, -1) == t):
+                parent[find(op.output)] = find(i)
+                break
+    members = set(parent) | set(parent.values())
+    return {t: find(t) for t in members}
+
+
 class ArenaPlanner:
-    """Offline best-fit offset assignment (greedy by decreasing size)."""
+    """Offline best-fit offset assignment (greedy by decreasing size).
+
+    Tensors chained through ``inplace`` operators are planned as one
+    shared buffer (same offset, union of lifetimes) — without this, a
+    partial-execution concat chain would be charged K copies of the
+    output tensor and the sliced schedule's savings would vanish."""
 
     @staticmethod
     def plan(graph: Graph, schedule: Sequence[Operator],
              include_constants: bool = True, alignment: int = 1) -> ArenaPlan:
         lifetimes = tensor_lifetimes(graph, schedule, include_constants)
-        items = sorted(lifetimes, key=lambda it: (-graph.size(it[0]), it[1]))
+        alias = inplace_alias_groups(graph, schedule)
+        # fold alias groups into one pseudo-tensor spanning all members
+        by_rep: Dict[str, List[Tuple[str, int, int]]] = {}
+        for name, s, e in lifetimes:
+            by_rep.setdefault(alias.get(name, name), []).append((name, s, e))
+        groups = [(rep, min(s for _, s, _ in members),
+                   max(e for _, _, e in members), members)
+                  for rep, members in by_rep.items()]
+        items = sorted(groups, key=lambda it: (-graph.size(it[0]), it[1]))
         placed: List[Placement] = []
+        expanded: List[Placement] = []
 
         def align(x: int) -> int:
             return (x + alignment - 1) // alignment * alignment
 
-        for name, s, e in items:
-            size = graph.size(name)
+        def expand(rep: str, offset: int,
+                   members: List[Tuple[str, int, int]]) -> None:
+            shared = rep if len(members) > 1 else None
+            for name, ms, me in members:
+                expanded.append(Placement(name, offset, graph.size(name),
+                                          ms, me, alias=shared))
+
+        for rep, s, e, members in items:
+            size = graph.size(rep)
             if size == 0:
-                placed.append(Placement(name, 0, 0, s, e))
+                placed.append(Placement(rep, 0, 0, s, e))
+                expand(rep, 0, members)
                 continue
             overlapping = [p for p in placed
                            if not (p.end < s or e < p.start) and p.size > 0]
@@ -185,16 +256,20 @@ class ArenaPlanner:
                     best_off, best_gap = cursor, gap
                 cursor = max(cursor, align(p.offset + p.size))
             offset = best_off if best_off is not None else cursor
-            placed.append(Placement(name, offset, size, s, e))
+            placed.append(Placement(rep, offset, size, s, e))
+            expand(rep, offset, members)
         arena = max((p.offset + p.size for p in placed), default=0)
-        return ArenaPlan(placed, arena)
+        return ArenaPlan(expanded, arena)
 
     @staticmethod
     def validate(plan: ArenaPlan) -> None:
-        """Overlapping lifetimes ⇒ disjoint address ranges."""
+        """Overlapping lifetimes ⇒ disjoint address ranges (tensors sharing
+        a buffer through an inplace chain are exempt by construction)."""
         ps = [p for p in plan.placements if p.size > 0]
         for i, a in enumerate(ps):
             for b in ps[i + 1:]:
+                if a.alias is not None and a.alias == b.alias:
+                    continue
                 time_overlap = not (a.end < b.start or b.end < a.start)
                 addr_overlap = not (a.offset + a.size <= b.offset
                                     or b.offset + b.size <= a.offset)

@@ -42,6 +42,16 @@ class Operator:
     attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
+def inplace_candidates(op: "Operator") -> List[str]:
+    """Inputs an ``inplace`` operator may overwrite: the one named by
+    ``attrs["inplace_input"]`` when present (ops like dynamic_update_slice
+    can only write into a specific operand), every input otherwise."""
+    target = op.attrs.get("inplace_input")
+    if target is not None:
+        return [i for i in op.inputs if i == target]
+    return op.inputs
+
+
 class Graph:
     """A computation DAG. Tensors are identified by name; each non-constant
     tensor has exactly one producer (single-output operators, as in TFLite)."""
@@ -181,12 +191,14 @@ class Graph:
             # paper §6 extension: an accumulating operator (attrs
             # inplace=True, e.g. elementwise add) whose input dies here and
             # matches the output size can write INTO that input — the output
-            # needs no separate buffer at this step.
+            # needs no separate buffer at this step.  When only one input is
+            # genuinely writable (e.g. dynamic_update_slice's operand), the
+            # op names it via attrs["inplace_input"].
             inplace_ok = op.attrs.get("inplace") and any(
                 last_use.get(i, -1) == t
                 and self.size(i) == self.size(op.output)
                 and i in self._producer
-                for i in op.inputs)
+                for i in inplace_candidates(op))
             if not inplace_ok:
                 live.add(op.output)
             for p in produced:

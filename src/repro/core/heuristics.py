@@ -302,24 +302,22 @@ def minimise_peak_memory_contracted(
 
 
 # ----------------------------------------------------------------- one-stop
-def schedule(graph: Graph, exact_limit: int = 18, contract_limit: int = 40,
-             beam_width: int = 64) -> ScheduleResult:
-    """Best-effort minimal-peak schedule:
-
-    1. greedy (always) — provides a branch-and-bound upper bound;
-    2. the paper's exact DP when the graph has ≤ ``exact_limit`` operators;
-    3. chain-contracted DP when the contracted graph has ≤ ``contract_limit``
-       super-nodes (near-exact; restricts chains to run contiguously);
-    4. beam search otherwise;
-    returns the best schedule found.
-    """
+def _cheap_candidates(graph: Graph) -> List[ScheduleResult]:
+    """Greedy plus the embedded (insertion) order — the tool must never make
+    a model worse than the schedule it shipped with."""
     results = [greedy_schedule(graph)]
-    try:  # the order embedded in the model is always a candidate — the tool
-        default = graph.default_schedule()  # must never make things worse
+    try:
+        default = graph.default_schedule()
         results.append(ScheduleResult(default, graph.peak_usage(default),
                                       0, method="default"))
     except ValueError:
         pass
+    return results
+
+
+def _schedule_plain(graph: Graph, exact_limit: int, contract_limit: int,
+                    beam_width: int) -> ScheduleResult:
+    results = _cheap_candidates(graph)
     ub = min(r.peak for r in results) + 1
     _, chains = build_chains(graph)
     if len(graph.operators) <= exact_limit:
@@ -333,4 +331,46 @@ def schedule(graph: Graph, exact_limit: int = 18, contract_limit: int = 40,
     else:
         results.append(beam_schedule(graph, width=beam_width))
     best = min(results, key=lambda r: r.peak)
+    return best
+
+
+def schedule(graph: Graph, exact_limit: int = 18, contract_limit: int = 40,
+             beam_width: int = 64, arena_budget: Optional[int] = None,
+             partition: bool = False,
+             partition_opts: Optional[dict] = None) -> ScheduleResult:
+    """Best-effort minimal-peak schedule:
+
+    1. greedy (always) — provides a branch-and-bound upper bound;
+    2. the paper's exact DP when the graph has ≤ ``exact_limit`` operators;
+    3. chain-contracted DP when the contracted graph has ≤ ``contract_limit``
+       super-nodes (near-exact; restricts chains to run contiguously);
+    4. beam search otherwise;
+    returns the best schedule found.
+
+    **Partial-execution pre-pass.**  When ``partition`` is set — or
+    ``arena_budget`` is given and reordering alone cannot reach it — the
+    graph is rewritten by ``partition.partition_graph`` (operators split into
+    K spatial slices plus an incremental concat) and the rewritten graph is
+    scheduled too; whichever peak is lower wins.  A partitioned winner is
+    returned with ``result.graph`` set to the rewritten graph (the schedule's
+    operators belong to it); ``result.graph is None`` means the caller's
+    graph.  The rewritten graph's insertion order already encodes the
+    partial-execution order, so it is scheduled with the cheap candidates
+    (default + greedy) only.
+    """
+    best = _schedule_plain(graph, exact_limit, contract_limit, beam_width)
+    want = partition or (arena_budget is not None
+                         and best.peak > arena_budget)
+    if not want:
+        return best
+    from .partition import partition_graph   # deferred: partition is optional
+    pr = partition_graph(graph, budget=arena_budget,
+                         **(partition_opts or {}))
+    if not pr.segments:
+        return best
+    pg = pr.graph
+    pbest = min(_cheap_candidates(pg), key=lambda r: r.peak)
+    if pbest.peak < best.peak:
+        return dataclasses.replace(pbest, graph=pg,
+                                   method=pbest.method + "+pex")
     return best

@@ -14,6 +14,11 @@ Guarantees:
 * the reordered jaxpr is a valid topological order (checked);
 * evaluation is numerically identical (tests assert bit-equality);
 * effectful jaxprs are returned unchanged (reordering could reorder IO).
+
+With ``partition_budget`` set, the partial-execution rewrite
+(``jaxpr_partial``, DESIGN.md §3) may additionally split equation chains
+into row slices; see that module for its (slightly weaker, dot_general
+float-tolerance) numerics contract.
 """
 from __future__ import annotations
 
@@ -96,7 +101,19 @@ def jaxpr_to_graph(jaxpr: jcore.Jaxpr,
         g.add_tensor(out_name, size)
         for v in outs:
             var_tensor[id(v)] = out_name
-        g.add_operator(name, ins, out_name, kind=eqn.primitive.name)
+        # dynamic_update_slice writes into its operand (invars[0]); XLA
+        # performs it in place when the operand is dead, which is exactly how
+        # the partial-execution accumulator (jaxpr_partial) is built — model
+        # it so the liveness accounting charges the buffer once.  Only the
+        # operand is writable, so name it: a dying size-matched *update*
+        # could not be aliased by XLA.
+        attrs = {}
+        if eqn.primitive.name == "dynamic_update_slice" and ins:
+            operand = (None if isinstance(eqn.invars[0], Literal)
+                       else var_tensor.get(id(eqn.invars[0])))
+            if operand is not None:
+                attrs = {"inplace": True, "inplace_input": operand}
+        g.add_operator(name, ins, out_name, kind=eqn.primitive.name, **attrs)
         eqn_index[name] = k
 
     out_tensors: List[str] = []
@@ -117,7 +134,12 @@ def reorder_closed_jaxpr(closed: jcore.ClosedJaxpr,
                          exact_limit: int = 16,
                          contract_limit: int = 36,
                          beam_width: int = 32,
+                         partition_budget: Optional[int] = None,
                          ) -> Tuple[jcore.ClosedJaxpr, ReorderReport]:
+    """Reorder equations for minimal peak liveness; when ``partition_budget``
+    is given and reordering alone stays above it, additionally try the
+    partial-execution rewrite (``jaxpr_partial``) and keep whichever jaxpr
+    peaks lower."""
     jaxpr = closed.jaxpr
     if jaxpr.effects:
         g, _ = jaxpr_to_graph(jaxpr, shard_divisor)
@@ -131,14 +153,29 @@ def reorder_closed_jaxpr(closed: jcore.ClosedJaxpr,
                                     beam_width=beam_width)
     order = [eqn_index[op.name] for op in res.schedule]
     changed = order != sorted(order)
-    if not changed:
-        return closed, ReorderReport(len(jaxpr.eqns), default_peak,
-                                     default_peak, res.method, False)
-    new_eqns = [jaxpr.eqns[i] for i in order]
-    new_jaxpr = jaxpr.replace(eqns=new_eqns)
-    new_closed = jcore.ClosedJaxpr(new_jaxpr, closed.consts)
-    return new_closed, ReorderReport(len(jaxpr.eqns), default_peak,
-                                     res.peak, res.method, True)
+    if changed:
+        new_eqns = [jaxpr.eqns[i] for i in order]
+        new_closed = jcore.ClosedJaxpr(jaxpr.replace(eqns=new_eqns),
+                                       closed.consts)
+        best = (new_closed, ReorderReport(len(jaxpr.eqns), default_peak,
+                                          res.peak, res.method, True))
+    else:
+        best = (closed, ReorderReport(len(jaxpr.eqns), default_peak,
+                                      default_peak, res.method, False))
+    if partition_budget is not None and best[1].peak_after > partition_budget:
+        from .jaxpr_partial import partial_execute_closed_jaxpr
+        pclosed, n_runs = partial_execute_closed_jaxpr(
+            closed, budget=partition_budget, shard_divisor=shard_divisor)
+        if n_runs:
+            pc2, rep2 = reorder_closed_jaxpr(
+                pclosed, shard_divisor, exact_limit, contract_limit,
+                beam_width)
+            if rep2.peak_after < best[1].peak_after:
+                rep2 = dataclasses.replace(
+                    rep2, peak_before=default_peak,
+                    method=rep2.method + "+pex", changed=True)
+                best = (pc2, rep2)
+    return best
 
 
 def peak_liveness(closed: jcore.ClosedJaxpr, shard_divisor: int = 1) -> int:

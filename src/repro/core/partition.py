@@ -1,0 +1,499 @@
+"""Partial execution (Pex-style) graph transform.
+
+The paper (Liberis & Lane 2019) reorders whole operators; its sequel — *Pex:
+Memory-efficient Microcontroller Deep Learning through Partial Execution*
+(Liberis & Lane 2022) — goes further: an operator chain is split into K
+spatial slices so that only a fraction of its interior tensors is ever live.
+This module implements that transform over the reordering ``Graph`` IR:
+
+* **Eligibility** is declared per-operator through a ``SliceSpec`` attached in
+  ``Operator.attrs`` (see ``graphs/cnn_ops.py`` for the CNN classification:
+  elementwise ops, depthwise/regular convolutions and spatial pooling are
+  sliceable; global pooling, FC and concat are not).  A spec carries the
+  row-map of the op — kernel/stride under TF-style SAME padding — which is
+  everything needed to push an output row range back to the input rows it
+  reads (including the halo that neighbouring slices recompute).
+
+* **Segments** are contiguous runs of sliceable operators inside the maximal
+  linear chains of the graph.  Splitting a single operator cannot save
+  memory (its input and output buffers must coexist regardless); splitting a
+  chain means the fat *interior* tensors only ever exist one slice at a time.
+
+* **The rewrite** replaces a segment with, per slice ``s``:
+  ``pex_slice`` extract operators (halo-aware row windows of the segment's
+  external inputs), per-slice clones of the member operators (explicit
+  padding replaces SAME so numerics are bit-identical), and an incremental
+  ``pex_concat`` that writes the slice into the full output buffer.  The
+  concat chain is marked ``inplace`` — each link dies as the next is written
+  — so the memory model (``Graph.live_sets``), the arena planner and the
+  micro-interpreter all charge the output buffer exactly once.  This mirrors
+  Pex's "operators write into a shared buffer" execution.
+
+* **The cost model** (``plan_partition``) picks per-segment boundaries and K
+  to hit a target arena budget, subject to a cap on the extra MACs spent
+  recomputing halo rows — the Pex latency/memory trade-off.
+
+The transform never changes results: a partitioned graph evaluates
+bit-identically to the original (property-tested through the
+micro-interpreter).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .graph import Graph, Operator, linear_chains
+
+# Attribute key under which builders attach a SliceSpec to eligible ops.
+PEX_ATTR = "pex_slice_spec"
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceSpec:
+    """Row-map of a spatially-sliceable operator (TF SAME padding semantics).
+
+    ``kernel``/``stride`` describe how output rows map to input rows along
+    the leading (height) axis.  ``sliced_inputs`` lists the input positions
+    that follow the row map (``None`` = all of them — elementwise); inputs
+    not listed are consumed whole by every slice.  ``make_fn(op, pad_top,
+    pad_bottom)`` builds the executable for a clone whose input slice needs
+    explicit edge padding; ``None`` leaves clones without semantics
+    (scheduling-only graphs).  ``macs_per_row`` feeds the halo-recompute
+    overhead model.
+    """
+
+    kernel: int = 1
+    stride: int = 1
+    sliced_inputs: Optional[Tuple[int, ...]] = None
+    make_fn: Optional[Callable[[Operator, int, int], Callable[..., Any]]] = None
+    macs_per_row: int = 0
+
+
+def spec_of(op: Operator) -> Optional[SliceSpec]:
+    return op.attrs.get(PEX_ATTR)
+
+
+# ------------------------------------------------------------------ row maps
+def same_pads(h_in: int, kernel: int, stride: int) -> Tuple[int, int, int]:
+    """(out_rows, pad_begin, pad_end) of TF-style SAME padding."""
+    out = -(-h_in // stride)
+    total = max((out - 1) * stride + kernel - h_in, 0)
+    return out, total // 2, total - total // 2
+
+
+def in_rows(kernel: int, stride: int, h_in: int, oa: int, ob: int
+            ) -> Tuple[int, int, int, int]:
+    """Input rows [lo, hi) and explicit pads (top, bottom) needed to produce
+    output rows [oa, ob) of a SAME-padded windowed op."""
+    _, pad_beg, _ = same_pads(h_in, kernel, stride)
+    lo = oa * stride - pad_beg
+    hi = (ob - 1) * stride - pad_beg + kernel
+    top, bottom = max(0, -lo), max(0, hi - h_in)
+    return max(lo, 0), min(hi, h_in), top, bottom
+
+
+def _height(graph: Graph, tensor: str) -> Optional[int]:
+    t = graph.tensors[tensor]
+    if not t.shape:
+        return None
+    h = int(t.shape[0])
+    if h < 1 or t.size % h != 0:
+        return None
+    return h
+
+
+def _chain_input_index(op: Operator, pred_output: str) -> int:
+    return op.inputs.index(pred_output)
+
+
+def _op_eligible(graph: Graph, op: Operator) -> bool:
+    spec = spec_of(op)
+    if spec is None:
+        return False
+    h_out = _height(graph, op.output)
+    if h_out is None or h_out < 2:
+        return False
+    sliced = (spec.sliced_inputs if spec.sliced_inputs is not None
+              else tuple(range(len(op.inputs))))
+    if not sliced:
+        return False
+    if spec.kernel > 1 or spec.stride > 1:
+        # windowed ops: exactly one halo'd input whose SAME output height
+        # matches the recorded output height
+        if len(sliced) != 1:
+            return False
+        h_in = _height(graph, op.inputs[sliced[0]])
+        if h_in is None or same_pads(h_in, spec.kernel, spec.stride)[0] != h_out:
+            return False
+    else:
+        # elementwise family: every sliced input must share the output height
+        for idx in sliced:
+            if idx >= len(op.inputs) or _height(graph, op.inputs[idx]) != h_out:
+                return False
+    return True
+
+
+def _sliced_indices(op: Operator) -> Tuple[int, ...]:
+    spec = spec_of(op)
+    assert spec is not None
+    return (spec.sliced_inputs if spec.sliced_inputs is not None
+            else tuple(range(len(op.inputs))))
+
+
+def sliceable_runs(graph: Graph) -> List[List[Operator]]:
+    """Contiguous runs (length >= 2) of sliceable ops within the maximal
+    linear chains of the graph, where every chain link enters its consumer
+    through a sliced input position."""
+    runs: List[List[Operator]] = []
+    for chain in linear_chains(graph):
+        cur: List[Operator] = []
+        for op in chain:
+            links = (not cur or
+                     _chain_input_index(op, cur[-1].output) in
+                     (_sliced_indices(op) if spec_of(op) else ()))
+            if _op_eligible(graph, op) and links:
+                cur.append(op)
+            else:
+                if len(cur) >= 2:
+                    runs.append(cur)
+                cur = [op] if _op_eligible(graph, op) else []
+        if len(cur) >= 2:
+            runs.append(cur)
+    return runs
+
+
+# --------------------------------------------------------------- slice plans
+@dataclasses.dataclass
+class _SlicePlan:
+    # per op name: output row range (oa, ob)
+    out: Dict[str, Tuple[int, int]]
+    # per op name: per input index -> (lo, hi, pad_top, pad_bottom) for
+    # sliced inputs, None for whole inputs
+    ins: Dict[str, List[Optional[Tuple[int, int, int, int]]]]
+
+
+def slice_plans(graph: Graph, ops: Sequence[Operator], k: int
+                ) -> List[_SlicePlan]:
+    """Back-propagate output row ranges of the K slices through the segment.
+    Slice ``s`` of the final output covers rows [s*H//K, (s+1)*H//K)."""
+    h_final = _height(graph, ops[-1].output)
+    assert h_final is not None and 2 <= k <= h_final
+    bounds = [(s * h_final) // k for s in range(k + 1)]
+    plans: List[_SlicePlan] = []
+    for s in range(k):
+        out: Dict[str, Tuple[int, int]] = {}
+        ins: Dict[str, List[Optional[Tuple[int, int, int, int]]]] = {}
+        oa, ob = bounds[s], bounds[s + 1]
+        for d in range(len(ops) - 1, -1, -1):
+            op = ops[d]
+            spec = spec_of(op)
+            assert spec is not None
+            out[op.name] = (oa, ob)
+            sliced = _sliced_indices(op)
+            row_plan: List[Optional[Tuple[int, int, int, int]]] = []
+            for idx, inp in enumerate(op.inputs):
+                if idx not in sliced:
+                    row_plan.append(None)
+                    continue
+                h_in = _height(graph, inp)
+                assert h_in is not None
+                row_plan.append(in_rows(spec.kernel, spec.stride, h_in,
+                                        oa, ob))
+            ins[op.name] = row_plan
+            if d > 0:
+                ci = _chain_input_index(op, ops[d - 1].output)
+                lo, hi, _, _ = row_plan[ci]  # type: ignore[misc]
+                oa, ob = lo, hi
+        plans.append(_SlicePlan(out, ins))
+    return plans
+
+
+# ----------------------------------------------------------------- cost model
+@dataclasses.dataclass
+class Segment:
+    ops: List[Operator]
+    k: int
+    est_peak: int            # local estimate: externals + output + slice live
+    extra_macs_frac: float   # halo recompute cost relative to segment MACs
+
+
+def _row_bytes(graph: Graph, tensor: str) -> int:
+    h = _height(graph, tensor)
+    assert h is not None
+    return graph.size(tensor) // h
+
+
+def _macs_per_row(graph: Graph, op: Operator) -> int:
+    spec = spec_of(op)
+    if spec is not None and spec.macs_per_row > 0:
+        return spec.macs_per_row
+    return max(1, _row_bytes(graph, op.output))
+
+
+def _external_inputs(ops: Sequence[Operator]) -> List[str]:
+    internal = {op.output for op in ops}
+    exts: List[str] = []
+    for op in ops:
+        for i in op.inputs:
+            if i not in internal and i not in exts:
+                exts.append(i)
+    return exts
+
+
+def estimate_segment(graph: Graph, ops: Sequence[Operator], k: int
+                     ) -> Tuple[int, float]:
+    """(estimated peak bytes while the partitioned segment runs, halo
+    overhead as a fraction of the segment's MACs).
+
+    The estimate charges: every external input whole (slices are extracted
+    from it, so it lives until the last slice), the full output buffer (the
+    inplace concat accumulator), and the fattest per-slice step
+    (inputs + output of one clone).  Co-live tensors from elsewhere in the
+    graph are not the segment's to know — callers verify the true peak by
+    scheduling the rewritten graph.
+    """
+    plans = slice_plans(graph, ops, k)
+    ext_bytes = sum(graph.size(e) for e in _external_inputs(ops))
+    out_bytes = graph.size(ops[-1].output)
+    slice_live = 0
+    base_macs = extra_macs = 0
+    rows_done: Dict[str, int] = {}
+    for op in ops:
+        base_macs += _height(graph, op.output) * _macs_per_row(graph, op)
+    for plan in plans:
+        for d, op in enumerate(ops):
+            oa, ob = plan.out[op.name]
+            step = (ob - oa) * _row_bytes(graph, op.output)
+            for idx, rp in enumerate(plan.ins[op.name]):
+                if rp is not None:
+                    lo, hi, _, _ = rp
+                    step += (hi - lo) * _row_bytes(graph, op.inputs[idx])
+            slice_live = max(slice_live, step)
+            rows_done[op.name] = rows_done.get(op.name, 0) + (ob - oa)
+    for op in ops:
+        extra = rows_done[op.name] - _height(graph, op.output)
+        extra_macs += max(0, extra) * _macs_per_row(graph, op)
+    frac = extra_macs / base_macs if base_macs else 0.0
+    return ext_bytes + out_bytes + slice_live, frac
+
+
+def _local_baseline(graph: Graph, ops: Sequence[Operator]) -> int:
+    """Unpartitioned local peak proxy: fattest single step of the run."""
+    return max(graph.size(op.output) + sum(graph.size(i) for i in op.inputs)
+               for op in ops)
+
+
+def _choose_in_run(graph: Graph, run: List[Operator],
+                   budget: Optional[int], max_k: int, overhead_cap: float,
+                   k_choices: Sequence[int]) -> List[Segment]:
+    """Best (sub-segment, K) of a sliceable run, then recurse on what is left
+    to the segment's sides (a long chain may need several segments)."""
+    if len(run) < 2:
+        return []
+    best: Optional[Tuple[Tuple, int, int, int, float]] = None
+    baseline = _local_baseline(graph, run)
+    for i in range(len(run)):
+        for j in range(i + 1, len(run)):
+            ops = run[i:j + 1]
+            h_final = _height(graph, ops[-1].output)
+            floor = (sum(graph.size(e) for e in _external_inputs(ops))
+                     + graph.size(ops[-1].output))
+            if floor >= baseline and (budget is None or floor >= budget):
+                continue            # cannot beat the unsplit run
+            for k in k_choices:
+                if k > min(max_k, h_final):
+                    continue
+                est, frac = estimate_segment(graph, ops, k)
+                if frac > overhead_cap or est >= baseline:
+                    continue
+                meets = budget is not None and est <= budget
+                # rank: meeting the budget first, then lowest estimated
+                # peak, then cheapest halo recompute, then smallest K
+                key = (0 if meets else 1, est, frac, k)
+                if best is None or key < best[0]:
+                    best = (key, i, j, k, frac)
+    if best is None:
+        return []
+    _, i, j, k, frac = best
+    ops = run[i:j + 1]
+    est, frac = estimate_segment(graph, ops, k)
+    segs = [Segment(list(ops), k, est, frac)]
+    segs += _choose_in_run(graph, run[:i], budget, max_k, overhead_cap,
+                           k_choices)
+    segs += _choose_in_run(graph, run[j + 1:], budget, max_k, overhead_cap,
+                           k_choices)
+    return segs
+
+
+def plan_partition(graph: Graph, budget: Optional[int] = None,
+                   max_k: int = 16, overhead_cap: float = 0.5,
+                   k_choices: Sequence[int] = (2, 3, 4, 6, 8, 12, 16)
+                   ) -> List[Segment]:
+    segs: List[Segment] = []
+    for run in sliceable_runs(graph):
+        segs.extend(_choose_in_run(graph, run, budget, max_k, overhead_cap,
+                                   k_choices))
+    return segs
+
+
+# -------------------------------------------------------------------- rewrite
+def _slice_fn(lo: int, hi: int) -> Callable[..., Any]:
+    def fn(a, lo=lo, hi=hi):
+        return np.asarray(a)[lo:hi]
+    return fn
+
+
+def _concat_fn(start: int, shape: Tuple[int, ...], first: bool
+               ) -> Callable[..., Any]:
+    if first:
+        def fn(part, start=start, shape=shape):
+            part = np.asarray(part)
+            acc = np.zeros(shape, part.dtype)
+            acc[start:start + part.shape[0]] = part
+            return acc
+    else:
+        def fn(acc, part, start=start):
+            part = np.asarray(part)
+            out = np.array(acc)        # the simulator copies; on-device this
+            out[start:start + part.shape[0]] = part   # writes in place
+            return out
+    return fn
+
+
+def _emit_segment(old: Graph, new: Graph, seg: Segment) -> None:
+    ops, k = seg.ops, seg.k
+    head = ops[0].name
+    y = ops[-1].output
+    ty = old.tensors[y]
+    executable = all(op.fn is not None for op in ops) and all(
+        spec_of(op).make_fn is not None for op in ops)  # type: ignore[union-attr]
+    plans = slice_plans(old, ops, k)
+    bounds = [plan.out[ops[-1].name] for plan in plans]
+    extracts: Dict[Tuple[str, int, int], str] = {}
+    acc_prev: Optional[str] = None
+
+    def extract(inp: str, lo: int, hi: int) -> str:
+        key = (inp, lo, hi)
+        if key not in extracts:
+            t_in = old.tensors[inp]
+            tname = f"{inp}__pex_{head}_{lo}_{hi}"
+            shape = (hi - lo,) + tuple(t_in.shape[1:]) if t_in.shape else ()
+            new.add_tensor(tname, (hi - lo) * _row_bytes(old, inp), shape,
+                           t_in.dtype)
+            new.add_operator(f"pexsl__{head}_{len(extracts)}", [inp], tname,
+                             kind="pex_slice",
+                             fn=_slice_fn(lo, hi) if executable else None)
+            extracts[key] = tname
+        return extracts[key]
+
+    for s in range(k):
+        plan = plans[s]
+        for d, op in enumerate(ops):
+            spec = spec_of(op)
+            assert spec is not None
+            oa, ob = plan.out[op.name]
+            pads = (0, 0)
+            ins: List[str] = []
+            for idx, inp in enumerate(op.inputs):
+                rp = plan.ins[op.name][idx]
+                if rp is None:
+                    ins.append(inp)               # consumed whole
+                    continue
+                lo, hi, top, bottom = rp
+                if top or bottom:
+                    pads = (top, bottom)
+                if d > 0 and inp == ops[d - 1].output:
+                    ins.append(f"{inp}__pex{s}")
+                else:
+                    ins.append(extract(inp, lo, hi))
+            t_out = old.tensors[op.output]
+            oname = f"{op.output}__pex{s}"
+            shape = ((ob - oa,) + tuple(t_out.shape[1:])
+                     if t_out.shape else ())
+            new.add_tensor(oname, (ob - oa) * _row_bytes(old, op.output),
+                           shape, t_out.dtype)
+            attrs = {a: v for a, v in op.attrs.items() if a != PEX_ATTR}
+            attrs["pex_of"] = op.name
+            fn = (spec.make_fn(op, pads[0], pads[1])
+                  if executable else None)   # type: ignore[misc]
+            new.add_operator(f"{op.name}__pex{s}", ins, oname, kind=op.kind,
+                             fn=fn, **attrs)
+        # incremental concat: write this slice into the shared output buffer
+        part = f"{y}__pex{s}"
+        start = bounds[s][0]
+        out_name = y if s == k - 1 else f"{y}__pexacc{s}"
+        if s < k - 1:
+            new.add_tensor(out_name, ty.size, ty.shape, ty.dtype)
+        if s == 0:
+            new.add_operator(f"pexcat__{head}_0", [part], out_name,
+                             kind="pex_concat",
+                             fn=(_concat_fn(start, tuple(ty.shape), True)
+                                 if executable else None))
+        else:
+            new.add_operator(f"pexcat__{head}_{s}", [acc_prev, part],
+                             out_name, kind="pex_concat",
+                             fn=(_concat_fn(start, tuple(ty.shape), False)
+                                 if executable else None),
+                             inplace=True, inplace_input=acc_prev)
+        acc_prev = out_name
+
+
+@dataclasses.dataclass
+class PartitionResult:
+    graph: Graph
+    segments: List[Segment]
+
+    @property
+    def n_slices(self) -> int:
+        return sum(s.k for s in self.segments)
+
+    @property
+    def extra_macs_frac(self) -> float:
+        """Halo recompute overhead, worst segment (the Pex latency cost)."""
+        return max((s.extra_macs_frac for s in self.segments), default=0.0)
+
+    def __str__(self) -> str:
+        return (f"pex: {len(self.segments)} segments, "
+                f"{self.n_slices} slices, halo overhead "
+                f"<= {self.extra_macs_frac:.1%}")
+
+
+def apply_partition(graph: Graph, segments: Sequence[Segment]) -> Graph:
+    """Rewrite ``graph`` with every segment split into its K slices.  The
+    rewritten graph's insertion order is the Pex execution order (slice 0's
+    chain, its concat, slice 1's chain, ...), so ``default_schedule`` of the
+    result is already partial-execution-shaped; schedulers may still improve
+    on it."""
+    heads = {seg.ops[0].name: seg for seg in segments}
+    member = {op.name for seg in segments for op in seg.ops}
+    interior = {op.output for seg in segments for op in seg.ops[:-1]}
+    new = Graph()
+    for name, t in graph.tensors.items():
+        if name not in interior:
+            new.add_tensor(name, t.size, t.shape, t.dtype)
+    for op in graph.operators:
+        if op.name in heads:
+            _emit_segment(graph, new, heads[op.name])
+        elif op.name in member:
+            continue
+        else:
+            new.add_operator(op.name, list(op.inputs), op.output,
+                             kind=op.kind, fn=op.fn, **op.attrs)
+    new.set_outputs(graph.outputs)
+    return new
+
+
+def partition_graph(graph: Graph, budget: Optional[int] = None,
+                    max_k: int = 16, overhead_cap: float = 0.5,
+                    k_choices: Sequence[int] = (2, 3, 4, 6, 8, 12, 16)
+                    ) -> PartitionResult:
+    """One-stop transform: plan segments/K against ``budget`` (None = just
+    minimise the estimated peak) and rewrite the graph.  Returns the input
+    graph unchanged (``result.graph is graph``) when nothing is eligible."""
+    segments = plan_partition(graph, budget, max_k, overhead_cap, k_choices)
+    if not segments:
+        return PartitionResult(graph, [])
+    return PartitionResult(apply_partition(graph, segments), segments)

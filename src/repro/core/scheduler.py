@@ -23,6 +23,9 @@ class ScheduleResult:
     peak: int
     states_visited: int
     method: str = "exact"
+    # When a partial-execution pre-pass rewrote the graph, the schedule's
+    # operators belong to this graph (None = the graph passed by the caller).
+    graph: Optional["Graph"] = None
 
 
 def _split(graph: Graph, x_set: FrozenSet[str]) -> Tuple[List[str], List[str]]:

@@ -3,6 +3,19 @@ micro-interpreter simulator).  Weights are deterministic per-op constants
 kept in ``Operator.attrs`` — they model NOR-Flash residency (paper §2.2:
 parameters are immutable static data, only activations occupy SRAM), so they
 are *not* tensors of the scheduling graph.
+
+This module is also where operators are classified for **partial execution**
+(Pex-style spatial slicing, ``core/partition.py``):
+
+* sliceable — elementwise (``add``), depthwise/regular convolution and
+  spatial max-pooling: their output rows map to a bounded window of input
+  rows under SAME padding, so a slice can be computed from a halo'd input
+  window with explicit edge padding, bit-identically to the full op;
+* not sliceable — global ``avgpool`` (its 1×1 output needs every input
+  row), ``fc`` (ditto), and ``concat`` (channel-wise join of whole maps).
+
+Each builder attaches a ``SliceSpec`` for the sliceable kinds; the spec's
+``make_fn`` rebuilds the op with explicit height padding for a slice.
 """
 from __future__ import annotations
 
@@ -18,7 +31,8 @@ try:  # jnp when available (tests run it through jax), numpy otherwise
 except Exception:  # pragma: no cover
     _HAVE_JAX = False
 
-from repro.core.graph import Graph
+from repro.core.graph import Graph, Operator
+from repro.core.partition import PEX_ATTR, SliceSpec, same_pads
 
 
 def _weight(name: str, shape: Tuple[int, ...], scale: float = 0.1):
@@ -28,6 +42,52 @@ def _weight(name: str, shape: Tuple[int, ...], scale: float = 0.1):
 
 def conv_out_hw(h: int, w: int, stride: int) -> Tuple[int, int]:
     return math.ceil(h / stride), math.ceil(w / stride)
+
+
+def _pads(n: int, k: int, stride: int) -> Tuple[int, int]:
+    _, beg, end = same_pads(n, k, stride)
+    return beg, end
+
+
+# ----------------------------------------------------- slice-spec factories
+def _windowed_slice_fn(kernel_name: str, attr_names: Tuple[str, ...]):
+    """make_fn factory for windowed kernels: reads the kernel's extra args
+    from op.attrs and rebuilds it with explicit height padding."""
+    def make(op: Operator, pad_top: int, pad_bottom: int):
+        kernel = globals()[kernel_name]
+        args = tuple(op.attrs[a] for a in attr_names)
+
+        def fn(x, kernel=kernel, args=args, hpad=(pad_top, pad_bottom)):
+            return kernel(x, *args, hpad=hpad)
+        return fn
+    return make
+
+
+def _elementwise_slice_fn(op: Operator, pad_top: int, pad_bottom: int):
+    assert pad_top == 0 and pad_bottom == 0
+    return op.fn
+
+
+def pex_spec(kind: str, out_shape: Tuple[int, int, int], cin: int,
+             k: int = 1, stride: int = 1) -> Optional[SliceSpec]:
+    """The partial-execution classification of a CNN operator kind."""
+    oh, ow, cout = out_shape
+    if kind == "conv":
+        return SliceSpec(k, stride, (0,),
+                         _windowed_slice_fn("conv2d", ("weight", "stride")),
+                         macs_per_row=ow * cout * k * k * cin)
+    if kind == "dwconv":
+        return SliceSpec(k, stride, (0,),
+                         _windowed_slice_fn("dwconv2d", ("weight", "stride")),
+                         macs_per_row=ow * cout * k * k)
+    if kind == "maxpool":
+        return SliceSpec(k, stride, (0,),
+                         _windowed_slice_fn("maxpool2d", ("k", "stride")),
+                         macs_per_row=ow * cout * k * k)
+    if kind == "add":
+        return SliceSpec(1, 1, None, _elementwise_slice_fn,
+                         macs_per_row=ow * cout)
+    return None    # concat / avgpool / fc: not spatially sliceable
 
 
 # Each builder registers a tensor + operator on the graph and returns the
@@ -47,12 +107,17 @@ class CNNBuilder:
         self.shapes[name] = (h, w, c)
         return name
 
-    def _emit(self, kind: str, inputs: Sequence[str], out_shape, fn, **attrs):
+    def _emit(self, kind: str, inputs: Sequence[str], out_shape, fn,
+              cin: int = 0, **attrs):
         name = self._next(kind)
         out = f"{name}_out"
         h, w, c = out_shape
         self.g.add_tensor(out, h * w * c, out_shape)
         self.shapes[out] = out_shape
+        spec = pex_spec(kind, out_shape, cin, attrs.get("k", 1),
+                        attrs.get("stride", 1))
+        if spec is not None:
+            attrs[PEX_ATTR] = spec
         self.g.add_operator(name, list(inputs), out, kind=kind, fn=fn, **attrs)
         return out
 
@@ -65,8 +130,9 @@ class CNNBuilder:
         def fn(a, w=wgt, stride=stride):
             return conv2d(a, w, stride)
 
-        return self._emit("conv", [x], (oh, ow, cout), fn,
-                          weight_bytes=wgt.size, k=k, stride=stride)
+        return self._emit("conv", [x], (oh, ow, cout), fn, cin=cin,
+                          weight_bytes=wgt.size, weight=wgt, k=k,
+                          stride=stride)
 
     def dwconv(self, x: str, k: int = 3, stride: int = 1) -> str:
         h, w, cin = self.shapes[x]
@@ -77,8 +143,19 @@ class CNNBuilder:
         def fn(a, w=wgt, stride=stride):
             return dwconv2d(a, w, stride)
 
-        return self._emit("dwconv", [x], (oh, ow, cin), fn,
-                          weight_bytes=wgt.size, k=k, stride=stride)
+        return self._emit("dwconv", [x], (oh, ow, cin), fn, cin=cin,
+                          weight_bytes=wgt.size, weight=wgt, k=k,
+                          stride=stride)
+
+    def maxpool(self, x: str, k: int = 2, stride: int = 2) -> str:
+        h, w, c = self.shapes[x]
+        oh, ow = conv_out_hw(h, w, stride)
+
+        def fn(a, k=k, stride=stride):
+            return maxpool2d(a, k, stride)
+
+        return self._emit("maxpool", [x], (oh, ow, c), fn, cin=c,
+                          k=k, stride=stride)
 
     def concat(self, xs: Sequence[str]) -> str:
         shapes = [self.shapes[x] for x in xs]
@@ -94,7 +171,8 @@ class CNNBuilder:
         def fn(x, y):
             return x + y
 
-        return self._emit("add", [a, b], self.shapes[a], fn)
+        cin = self.shapes[a][2]
+        return self._emit("add", [a, b], self.shapes[a], fn, cin=cin)
 
     def avgpool(self, x: str) -> str:
         h, w, c = self.shapes[x]
@@ -114,22 +192,44 @@ class CNNBuilder:
         return self._emit("fc", [x], (1, 1, nout), fn, weight_bytes=wgt.size)
 
 
-def conv2d(x, w, stride: int):
-    """x: (H,W,Cin) f32; w: (k,k,Cin,Cout); SAME padding; relu."""
+def conv2d(x, w, stride: int, hpad: Optional[Tuple[int, int]] = None):
+    """x: (H,W,Cin) f32; w: (k,k,Cin,Cout); SAME padding; relu.
+
+    ``hpad`` overrides the height padding with an explicit (top, bottom)
+    pair — partial execution uses this to run a slice whose interior edges
+    get their halo rows from the input window instead of zero padding.
+    SAME is reproduced exactly when ``hpad`` is None.
+    """
+    k = w.shape[0]
+    hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
+    wp = _pads(x.shape[1], w.shape[1], stride)
     y = lax.conv_general_dilated(
-        x[None], w, window_strides=(stride, stride), padding="SAME",
+        x[None], w, window_strides=(stride, stride), padding=[hp, wp],
         dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
     return jnp.maximum(y, 0.0)
 
 
-def dwconv2d(x, w, stride: int):
+def dwconv2d(x, w, stride: int, hpad: Optional[Tuple[int, int]] = None):
     cin = x.shape[-1]
+    k = w.shape[0]
+    hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
+    wp = _pads(x.shape[1], w.shape[1], stride)
     y = lax.conv_general_dilated(
         x[None], jnp.reshape(jnp.transpose(w, (0, 1, 3, 2)), (w.shape[0], w.shape[1], 1, cin)),
-        window_strides=(stride, stride), padding="SAME",
+        window_strides=(stride, stride), padding=[hp, wp],
         feature_group_count=cin,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
     return jnp.maximum(y, 0.0)
+
+
+def maxpool2d(x, k: int, stride: int,
+              hpad: Optional[Tuple[int, int]] = None):
+    """SAME max-pooling over (H, W); padding rows take the -inf identity, so
+    explicit-pad slices are bit-identical to the full op."""
+    hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
+    wp = _pads(x.shape[1], k, stride)
+    return lax.reduce_window(x, -jnp.inf, lax.max, (k, k, 1),
+                             (stride, stride, 1), (hp, wp, (0, 0)))
 
 
 def model_weight_bytes(graph: Graph) -> int:

@@ -12,6 +12,16 @@ TensorFlow-Lite-Micro interpreter does:
   outputs across schedules — the paper's property that reordering "does not
   change the architecture or the output of a neural network".
 
+Two extensions support partial-execution (Pex-style) sliced schedules:
+
+* operators marked ``inplace`` (the incremental ``pex_concat`` that writes a
+  slice into the shared output buffer) reuse the dying input's block via
+  ``DynamicAllocator.rename`` instead of allocating a second copy of the
+  output — matching ``Graph.live_sets``'s accounting;
+* ``run(..., plan=ArenaPlan)`` executes against precomputed offsets (the §6
+  offline planner) instead of the dynamic allocator, reporting the plan's
+  high-water mark so callers can cross-check it against ``plan.arena_size``.
+
 The report carries the paper's measurables: peak SRAM usage (arena
 high-water), defrag traffic (latency/energy-overhead proxy), and whether the
 model fits a given SRAM capacity.
@@ -24,8 +34,8 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.allocator import DynamicAllocator
-from repro.core.graph import Graph, Operator
+from repro.core.allocator import ArenaPlan, DynamicAllocator
+from repro.core.graph import Graph, Operator, inplace_candidates
 
 
 @dataclasses.dataclass
@@ -48,12 +58,18 @@ class MicroInterpreter:
 
     def run(self, inputs: Dict[str, Any],
             schedule: Optional[Sequence[Operator]] = None,
-            keep_outputs: bool = True) -> InterpreterReport:
+            keep_outputs: bool = True,
+            plan: Optional[ArenaPlan] = None) -> InterpreterReport:
         g = self.graph
         sched = list(schedule) if schedule is not None else g.default_schedule()
         if not g.is_valid_schedule(sched):
             raise ValueError("invalid schedule")
-        alloc = DynamicAllocator(self.capacity)
+        alloc = DynamicAllocator(self.capacity) if plan is None else None
+        offsets: Dict[str, tuple] = {}
+        if plan is not None:
+            offsets = {p.tensor: (p.offset, p.size) for p in plan.placements}
+        live_planned: Dict[str, int] = {}   # tensor -> offset+size
+        planned_peak = 0
         buffers: Dict[str, Any] = {}
 
         # reference counts: uses of each tensor by the remaining schedule,
@@ -65,18 +81,47 @@ class MicroInterpreter:
         for o in g.outputs:
             uses[o] = uses.get(o, 0) + 1
 
+        def planned_alloc(name: str) -> None:
+            nonlocal planned_peak
+            if name not in offsets:
+                raise KeyError(f"{name!r} missing from the arena plan")
+            off, size = offsets[name]
+            live_planned[name] = off + size
+            planned_peak = max(planned_peak, max(live_planned.values()))
+            if self.capacity is not None and planned_peak > self.capacity:
+                raise MemoryError(
+                    f"arena overflow at {name!r}: planned high water "
+                    f"{planned_peak} exceeds capacity {self.capacity}")
+
         # network inputs occupy SRAM from the start (paper Fig. 2: tensor 0)
         for name, value in inputs.items():
             if g.producer(name) is not None:
                 raise ValueError(f"{name!r} is not a graph input")
-            alloc.alloc(name, g.size(name))
+            if alloc is not None:
+                alloc.alloc(name, g.size(name))
+            else:
+                planned_alloc(name)
             buffers[name] = value
 
         t0 = time.perf_counter()
         for op in sched:
             # resolve current addresses (no stale pointers across defrags)
             args = [buffers[i] for i in op.inputs]
-            alloc.alloc(op.output, g.size(op.output))
+            # an inplace op whose dying, size-matched input can donate its
+            # buffer (partial execution's shared output buffer)
+            donor: Optional[str] = None
+            if op.attrs.get("inplace"):
+                for i in inplace_candidates(op):
+                    if (g.producer(i) is not None
+                            and g.size(i) == g.size(op.output)
+                            and uses[i] - op.inputs.count(i) <= 0):
+                        donor = i
+                        break
+            if alloc is not None:
+                if donor is None:
+                    alloc.alloc(op.output, g.size(op.output))
+            else:
+                planned_alloc(op.output)
             if op.fn is None:
                 raise ValueError(f"operator {op.name!r} has no semantics")
             out = op.fn(*args)
@@ -85,23 +130,34 @@ class MicroInterpreter:
             for i in set(op.inputs):
                 uses[i] -= op.inputs.count(i)
                 if uses[i] <= 0:
-                    alloc.free(i)
+                    if alloc is not None:
+                        if i == donor:
+                            alloc.rename(i, op.output)
+                        else:
+                            alloc.free(i)
+                    else:
+                        live_planned.pop(i, None)
                     del buffers[i]
             if uses.get(op.output, 0) <= 0:   # dead output (shouldn't happen)
-                alloc.free(op.output)
+                if alloc is not None:
+                    alloc.free(op.output)
+                else:
+                    live_planned.pop(op.output, None)
                 del buffers[op.output]
-            if self.defragment:
+            if alloc is not None and self.defragment:
                 alloc.defragment()
         wall = time.perf_counter() - t0
 
         outs = {o: np.asarray(buffers[o]) for o in g.outputs} \
             if keep_outputs else None
-        fits = (alloc.stats.peak_bytes <= self.capacity
+        peak = alloc.stats.peak_bytes if alloc is not None else planned_peak
+        fits = (peak <= self.capacity
                 if self.capacity is not None else None)
         return InterpreterReport(
-            peak_sram=alloc.stats.peak_bytes,
-            bytes_moved=alloc.stats.bytes_moved,
-            defrag_passes=alloc.stats.defrag_passes,
+            peak_sram=peak,
+            bytes_moved=alloc.stats.bytes_moved if alloc is not None else 0,
+            defrag_passes=(alloc.stats.defrag_passes
+                           if alloc is not None else 0),
             steps=len(sched),
             wall_time_s=wall,
             fits=fits,

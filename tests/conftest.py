@@ -1,5 +1,1 @@
-import pytest
-
-
-def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running integration test")
+# Markers and the fast-by-default selection live in pytest.ini.

@@ -1,0 +1,159 @@
+"""Allocator edge cases that the hypothesis property suite does not reach in
+environments without hypothesis: alignment > 1, zero-size tensors, the
+inplace alias machinery, and the plan-driven micro-interpreter cross-check.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (ArenaPlanner, DynamicAllocator, Graph,
+                        inplace_alias_groups, schedule, tensor_lifetimes)
+from repro.graphs import mobilenet_v1_graph
+from repro.mcu import MicroInterpreter
+
+
+def random_dag(seed: int, n_ops: int = 12) -> Graph:
+    """Random layered DAG with assorted tensor sizes (incl. zero)."""
+    rng = random.Random(seed)
+    g = Graph()
+    g.add_tensor("in0", rng.choice([64, 100, 128]))
+    produced = ["in0"]
+    for k in range(n_ops):
+        n_in = min(len(produced), rng.randint(1, 2))
+        ins = rng.sample(produced, n_in)
+        out = f"t{k}"
+        size = rng.choice([0, 8, 24, 64, 100, 256])
+        g.add_tensor(out, size)
+        g.add_operator(f"op{k}", ins, out)
+        produced.append(out)
+    g.set_outputs([produced[-1]])
+    return g
+
+
+# ------------------------------------------------------------------ alignment
+def test_arena_plan_alignment_and_no_overlap():
+    for seed in range(6):
+        g = random_dag(seed)
+        sched = g.default_schedule()
+        for alignment in (4, 8, 64):
+            plan = ArenaPlanner.plan(g, sched, alignment=alignment)
+            ArenaPlanner.validate(plan)
+            for p in plan.placements:
+                if p.size > 0:
+                    assert p.offset % alignment == 0, (seed, alignment, p)
+            # aligning can only grow the arena
+            assert plan.arena_size >= ArenaPlanner.plan(g, sched).arena_size
+
+
+def test_arena_plan_alignment_on_real_model():
+    g = mobilenet_v1_graph()
+    sched = schedule(g).schedule
+    plan = ArenaPlanner.plan(g, sched, alignment=16)
+    ArenaPlanner.validate(plan)
+    assert all(p.offset % 16 == 0 for p in plan.placements if p.size > 0)
+
+
+# ---------------------------------------------------------------- zero sizes
+def test_zero_size_tensors_plan_and_dynamic_alloc():
+    g = Graph()
+    g.add_tensor("x", 32)
+    g.add_tensor("z", 0)            # zero-size intermediate
+    g.add_tensor("y", 16)
+    g.add_operator("a", ["x"], "z")
+    g.add_operator("b", ["z", "x"], "y")
+    g.set_outputs(["y"])
+    sched = g.default_schedule()
+    plan = ArenaPlanner.plan(g, sched)
+    ArenaPlanner.validate(plan)
+    assert plan.offset_of("z") == 0 and plan.arena_size >= 48
+    lt = dict((n, (s, e)) for n, s, e in tensor_lifetimes(g, sched))
+    assert "z" in lt
+    a = DynamicAllocator()
+    a.alloc("z", 0)
+    a.alloc("x", 32)
+    assert a.live_bytes() == 32
+    a.free("z")
+    assert "z" not in a.addresses
+
+
+def test_dynamic_allocator_rename():
+    a = DynamicAllocator(capacity=64)
+    a.alloc("x", 32)
+    off = a.rename("x", "y")
+    assert off == 0 and a.addresses == {"y": 0}
+    with pytest.raises(KeyError):
+        a.rename("x", "z")
+    a.alloc("x", 16)
+    with pytest.raises(ValueError):
+        a.rename("x", "y")          # target name still allocated
+
+
+# -------------------------------------------------------------- alias groups
+def _inplace_chain_graph():
+    g = Graph()
+    g.add_tensor("x", 64)
+    for k in range(3):
+        g.add_tensor(f"acc{k}", 128)
+    g.add_tensor("p0", 64)
+    g.add_tensor("p1", 64)
+    g.add_operator("s0", ["x"], "p0")
+    g.add_operator("s1", ["x"], "p1")
+    g.add_operator("c0", ["p0"], "acc0")
+    g.add_operator("c1", ["acc0", "p1"], "acc1", inplace=True)
+    g.add_operator("c2", ["acc1"], "acc2", inplace=True)
+    g.set_outputs(["acc2"])
+    return g
+
+
+def test_inplace_chain_shares_one_buffer():
+    g = _inplace_chain_graph()
+    sched = g.default_schedule()
+    groups = inplace_alias_groups(g, sched)
+    rep = groups["acc2"]
+    assert groups["acc1"] == rep and groups["acc0"] == rep
+    plan = ArenaPlanner.plan(g, sched)
+    ArenaPlanner.validate(plan)
+    offs = {plan.offset_of(f"acc{k}") for k in range(3)}
+    assert len(offs) == 1
+    # one 128B buffer, not three: the arena stays small
+    assert plan.arena_size <= 64 + 64 + 128
+    # without the inplace attr the chain must NOT alias
+    g2 = _inplace_chain_graph()
+    for op in g2.operators:
+        op.attrs.pop("inplace", None)
+    assert inplace_alias_groups(g2, g2.default_schedule()) == {}
+
+
+# ----------------------------------------------- plan-driven interpreter run
+def test_interpreter_plan_mode_cross_checks_arena_size():
+    g = mobilenet_v1_graph(resolution=64)
+    res = schedule(g)
+    plan = ArenaPlanner.plan(g, res.schedule)
+    ArenaPlanner.validate(plan)
+    rng = np.random.default_rng(0)
+    h, w, c = g.tensors["input"].shape
+    x = {"input": rng.standard_normal((h, w, c)).astype(np.float32)}
+    dyn = MicroInterpreter(g).run(x, schedule=res.schedule)
+    pl = MicroInterpreter(g).run(x, schedule=res.schedule, plan=plan)
+    # the planned execution's high water is exactly the planned arena, and
+    # both executions agree on the numbers
+    assert pl.peak_sram == plan.arena_size
+    assert pl.bytes_moved == 0 and pl.defrag_passes == 0
+    for o in g.outputs:
+        np.testing.assert_array_equal(dyn.outputs[o], pl.outputs[o])
+    # neither model may undercut the liveness lower bound
+    live_peak = g.peak_usage(res.schedule)
+    assert dyn.peak_sram >= live_peak and pl.peak_sram >= live_peak
+
+
+def test_interpreter_plan_mode_enforces_capacity():
+    g = mobilenet_v1_graph()
+    sched = schedule(g).schedule
+    plan = ArenaPlanner.plan(g, sched)
+    rng = np.random.default_rng(0)
+    h, w, c = g.tensors["input"].shape
+    x = {"input": rng.standard_normal((h, w, c)).astype(np.float32)}
+    interp = MicroInterpreter(g, capacity=plan.arena_size - 1)
+    with pytest.raises(MemoryError):
+        interp.run(x, schedule=sched, plan=plan)

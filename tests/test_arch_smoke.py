@@ -9,6 +9,8 @@ import pytest
 from repro.configs import ARCH_IDS, get_config
 from repro.models.model import Model, init_cache, init_params
 
+pytestmark = pytest.mark.slow   # integration tier; see pytest.ini
+
 S = 32  # smoke sequence length
 
 

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st   # skips @given tests cleanly when hypothesis is absent
 
 from repro.core.jaxpr_reorder import (ReorderReport, peak_liveness,
                                       jaxpr_to_graph, reorder,

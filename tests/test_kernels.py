@@ -15,11 +15,16 @@ def rand(key, shape, dtype):
     return jax.random.normal(key, shape, jnp.float32).astype(dtype)
 
 
+# The first shape is the fast-tier smoke; the full sweep runs in the slow
+# tier (pytest -m slow) to keep tier-1 well under a minute.
 @pytest.mark.parametrize("B,Sq,Skv,H,K,D", [
     (1, 128, 128, 4, 4, 64),       # MHA square
-    (2, 128, 128, 8, 2, 64),       # GQA 4:1
-    (1, 256, 256, 4, 1, 128),      # MQA, bigger D
-    (1, 64, 256, 2, 2, 64),        # cross-ish (Sq < Skv), causal offset
+    pytest.param(2, 128, 128, 8, 2, 64,     # GQA 4:1
+                 marks=pytest.mark.slow),
+    pytest.param(1, 256, 256, 4, 1, 128,    # MQA, bigger D
+                 marks=pytest.mark.slow),
+    pytest.param(1, 64, 256, 2, 2, 64,      # cross-ish (Sq < Skv)
+                 marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_attention_matches_ref(B, Sq, Skv, H, K, D, dtype):
@@ -63,8 +68,8 @@ def test_flash_matches_model_chunked_path():
 
 @pytest.mark.parametrize("B,S,H,K,D,bs", [
     (2, 256, 4, 4, 64, 64),
-    (1, 512, 8, 2, 64, 128),
-    (3, 256, 4, 1, 128, 256),
+    pytest.param(1, 512, 8, 2, 64, 128, marks=pytest.mark.slow),
+    pytest.param(3, 256, 4, 1, 128, 256, marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_decode_attention_matches_ref(B, S, H, K, D, bs, dtype):

@@ -8,6 +8,8 @@ from repro.configs import get_config
 from repro.models.model import init_params
 from repro.serving import Request, ServingEngine
 
+pytestmark = pytest.mark.slow   # integration tier; see pytest.ini
+
 
 @pytest.fixture(scope="module")
 def engine():

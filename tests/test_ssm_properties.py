@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st   # skips @given tests cleanly when hypothesis is absent
 
 from repro.models.ssm import (causal_conv1d, chunked_linear_attention,
                               linear_attention_step, slstm_scan)

@@ -16,6 +16,8 @@ from repro.training import (adamw_init, adamw_update, cosine_lr,
 from repro.training.checkpoint import (latest_checkpoint, restore_checkpoint,
                                        save_checkpoint)
 
+pytestmark = pytest.mark.slow   # integration tier; see pytest.ini
+
 
 def test_cosine_lr_shape():
     assert float(cosine_lr(jnp.int32(0), peak=1.0, warmup=10,
