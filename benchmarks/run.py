@@ -1,12 +1,54 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows, then the §Roofline aggregation from the dry-run artifacts.
+#
+#   --json PATH   also emit a machine-readable BENCH_executor.json-style
+#                 trajectory (name, us_per_call, derived, peak_bytes) so
+#                 future PRs have a perf baseline to diff against
+#   --only a,b    run only the named benchmarks (e.g. figure1,executor)
+#   --smoke       small-graph subset inside each benchmark (CI)
+import argparse
+import json
+import os
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write rows as JSON to PATH as well as CSV stdout")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names to run "
+                         "(figure1,table1,scheduler,jaxpr,pex,executor,"
+                         "kernels,roofline)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="restrict benchmarks to their small-graph subsets")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
     from . import (bench_figure1, bench_table1, bench_scheduler,
-                   bench_jaxpr, bench_kernels, bench_pex, bench_roofline)
+                   bench_jaxpr, bench_kernels, bench_pex, bench_roofline,
+                   bench_executor)
+
+    by_name = {
+        "figure1": bench_figure1,
+        "table1": bench_table1,
+        "scheduler": bench_scheduler,
+        "jaxpr": bench_jaxpr,
+        "pex": bench_pex,
+        "executor": bench_executor,
+        "kernels": bench_kernels,
+        "roofline": bench_roofline,
+    }
+    if args.only:
+        unknown = [n for n in args.only.split(",") if n not in by_name]
+        if unknown:
+            ap.error(f"unknown benchmarks {unknown}; "
+                     f"choose from {sorted(by_name)}")
+        mods = [by_name[n] for n in args.only.split(",")]
+    else:
+        mods = list(by_name.values())
 
     rows = []
 
@@ -15,14 +57,32 @@ def main() -> None:
         print(f"{name},{us_per_call:.1f},{derived}")
 
     failed = []
-    for mod in (bench_figure1, bench_table1, bench_scheduler, bench_jaxpr,
-                bench_pex, bench_kernels, bench_roofline):
+    for mod in mods:
         print(f"# --- {mod.__name__} ---", flush=True)
         try:
             mod.run(report)
         except Exception:
             traceback.print_exc()
             failed.append(mod.__name__)
+
+    if args.json:
+        payload = {
+            "rows": [{
+                "name": name,
+                "us_per_call": us,
+                "derived": derived if isinstance(derived, (int, float, str,
+                                                           bool)) else
+                repr(derived),
+                "peak_bytes": derived if isinstance(derived, int)
+                and not isinstance(derived, bool) else None,
+            } for name, us, derived in rows],
+            "failed": failed,
+            "smoke": args.smoke,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

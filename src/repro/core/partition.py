@@ -375,7 +375,12 @@ def _emit_segment(old: Graph, new: Graph, seg: Segment) -> None:
     extracts: Dict[Tuple[str, int, int], str] = {}
     acc_prev: Optional[str] = None
 
-    def extract(inp: str, lo: int, hi: int) -> str:
+    # Every emitted op carries structured metadata (segment head, slice
+    # index, row windows) so backends that cannot call the numpy closures —
+    # the compiled arena executor lowers pex_slice/pex_concat to
+    # lax.dynamic_slice/dynamic_update_slice and rolls uniform slices into a
+    # fori_loop — can reconstruct the computation from attrs alone.
+    def extract(inp: str, lo: int, hi: int, s: int) -> str:
         key = (inp, lo, hi)
         if key not in extracts:
             t_in = old.tensors[inp]
@@ -385,7 +390,8 @@ def _emit_segment(old: Graph, new: Graph, seg: Segment) -> None:
                            t_in.dtype)
             new.add_operator(f"pexsl__{head}_{len(extracts)}", [inp], tname,
                              kind="pex_slice",
-                             fn=_slice_fn(lo, hi) if executable else None)
+                             fn=_slice_fn(lo, hi) if executable else None,
+                             pex_seg=head, pex_slice_idx=s, pex_rows=(lo, hi))
             extracts[key] = tname
         return extracts[key]
 
@@ -408,7 +414,7 @@ def _emit_segment(old: Graph, new: Graph, seg: Segment) -> None:
                 if d > 0 and inp == ops[d - 1].output:
                     ins.append(f"{inp}__pex{s}")
                 else:
-                    ins.append(extract(inp, lo, hi))
+                    ins.append(extract(inp, lo, hi, s))
             t_out = old.tensors[op.output]
             oname = f"{op.output}__pex{s}"
             shape = ((ob - oa,) + tuple(t_out.shape[1:])
@@ -417,6 +423,9 @@ def _emit_segment(old: Graph, new: Graph, seg: Segment) -> None:
                            shape, t_out.dtype)
             attrs = {a: v for a, v in op.attrs.items() if a != PEX_ATTR}
             attrs["pex_of"] = op.name
+            attrs["pex_seg"] = head
+            attrs["pex_slice_idx"] = s
+            attrs["pex_pads"] = pads
             fn = (spec.make_fn(op, pads[0], pads[1])
                   if executable else None)   # type: ignore[misc]
             new.add_operator(f"{op.name}__pex{s}", ins, oname, kind=op.kind,
@@ -431,13 +440,17 @@ def _emit_segment(old: Graph, new: Graph, seg: Segment) -> None:
             new.add_operator(f"pexcat__{head}_0", [part], out_name,
                              kind="pex_concat",
                              fn=(_concat_fn(start, tuple(ty.shape), True)
-                                 if executable else None))
+                                 if executable else None),
+                             pex_seg=head, pex_slice_idx=s, pex_start=start,
+                             pex_first=True)
         else:
             new.add_operator(f"pexcat__{head}_{s}", [acc_prev, part],
                              out_name, kind="pex_concat",
                              fn=(_concat_fn(start, tuple(ty.shape), False)
                                  if executable else None),
-                             inplace=True, inplace_input=acc_prev)
+                             inplace=True, inplace_input=acc_prev,
+                             pex_seg=head, pex_slice_idx=s, pex_start=start,
+                             pex_first=False)
         acc_prev = out_name
 
 

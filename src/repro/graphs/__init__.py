@@ -1,5 +1,21 @@
-from .figure1 import figure1_graph
+from .figure1 import figure1_executable_graph, figure1_graph
 from .swiftnet import swiftnet_cell_graph
 from .mobilenet import mobilenet_v1_graph
 
-__all__ = ["figure1_graph", "swiftnet_cell_graph", "mobilenet_v1_graph"]
+
+def random_input(graph, seed: int = 0):
+    """{name: f32 array} for the graph's (single consumed) input tensor —
+    the input-synthesis convention the tests and benchmarks share."""
+    import numpy as np
+
+    name = next((c for c in graph.constants() if graph.consumers(c)), None)
+    if name is None:
+        raise ValueError(f"{graph!r} has no consumed input tensor")
+    t = graph.tensors[name]
+    shape = t.shape if t.shape else (t.size,)
+    rng = np.random.default_rng(seed)
+    return {name: rng.standard_normal(shape).astype(np.float32)}
+
+
+__all__ = ["figure1_executable_graph", "figure1_graph",
+           "swiftnet_cell_graph", "mobilenet_v1_graph", "random_input"]

@@ -187,7 +187,11 @@ class CNNBuilder:
         wgt = _weight(f"fc{self._n + 1}_w", (h * w * c, nout))
 
         def fn(a, w=wgt):
-            return jnp.reshape(a, (1, 1, -1)) @ w
+            # explicit mul+reduce instead of a dot: XLA CPU emits tiny dots
+            # context-sensitively (surrounding fusion changes the
+            # accumulation path), which would break the compiled executor's
+            # bit-identity contract with this eager reference.
+            return jnp.sum(jnp.reshape(a, (-1, 1)) * w, axis=0)[None, None, :]
 
         return self._emit("fc", [x], (1, 1, nout), fn, weight_bytes=wgt.size)
 
@@ -234,3 +238,42 @@ def maxpool2d(x, k: int, stride: int,
 
 def model_weight_bytes(graph: Graph) -> int:
     return sum(op.attrs.get("weight_bytes", 0) for op in graph.operators)
+
+
+# ------------------------------------------------- compiled-executor lowering
+# Rules for the compiled arena executor (mcu/compile.py) live next to the
+# semantics they mirror.  Each rule rebuilds the op's computation from attrs
+# (weight/k/stride, plus the explicit pads a partial-execution clone carries
+# in ``pex_pads``), tracing the SAME jnp/lax calls the simulator fns run —
+# so compiled outputs stay bit-identical to the interpreter.  The pointwise
+# conv optionally routes through the Pallas fused conv+bias+relu kernel
+# (different accumulation order: fast, not bit-stable — opt-in).
+from repro.mcu.compile import register_lowering
+
+
+@register_lowering("conv")
+def _lower_conv(ctx, op: Operator, x):
+    w, stride = op.attrs["weight"], op.attrs["stride"]
+    if (ctx.use_pallas and op.attrs.get("k", 1) == 1 and stride == 1
+            and x.ndim == 3):
+        from repro.kernels import conv1x1_fused
+        return conv1x1_fused(x, jnp.asarray(w)[0, 0], relu=True,
+                             interpret=ctx.interpret)
+    return conv2d(x, w, stride, hpad=op.attrs.get("pex_pads"))
+
+
+@register_lowering("dwconv")
+def _lower_dwconv(ctx, op: Operator, x):
+    return dwconv2d(x, op.attrs["weight"], op.attrs["stride"],
+                    hpad=op.attrs.get("pex_pads"))
+
+
+@register_lowering("maxpool")
+def _lower_maxpool(ctx, op: Operator, x):
+    return maxpool2d(x, op.attrs["k"], op.attrs["stride"],
+                     hpad=op.attrs.get("pex_pads"))
+
+
+@register_lowering("add")
+def _lower_add(ctx, op: Operator, x, y):
+    return x + y

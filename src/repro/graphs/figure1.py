@@ -35,3 +35,21 @@ def figure1_graph() -> Graph:
     g.add_operator("op7", ["t5", "t6"], "t7", kind="concat")
     g.set_outputs(["t7"])
     return g
+
+
+def figure1_executable_graph() -> Graph:
+    """figure1 with deterministic f32 semantics attached, so the executors
+    (micro-interpreter and compiled) can run it — the paper's figure is a
+    scheduling exemplar and ships without numerics.  Shared by the
+    differential tests and the executor benchmark so both exercise the same
+    program."""
+    import jax.numpy as jnp
+
+    g = figure1_graph()
+    for op in g.operators:
+        if op.kind == "concat":
+            op.fn = lambda *xs: jnp.concatenate([jnp.ravel(x) for x in xs])
+        else:
+            n = g.size(op.output)
+            op.fn = (lambda n: lambda x: jnp.resize(x, (n,)) * 0.5 + 0.25)(n)
+    return g

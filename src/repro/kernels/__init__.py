@@ -1,4 +1,5 @@
 from .flash_attention.ops import flash_attention
 from .decode_attention.ops import decode_attention
+from .conv_pointwise.ops import conv1x1_fused
 
-__all__ = ["flash_attention", "decode_attention"]
+__all__ = ["flash_attention", "decode_attention", "conv1x1_fused"]

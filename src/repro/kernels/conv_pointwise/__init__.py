@@ -1,0 +1,3 @@
+from .ops import conv1x1_fused
+
+__all__ = ["conv1x1_fused"]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused pointwise conv kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def conv1x1_ref(x: jax.Array, w: jax.Array,
+                b: Optional[jax.Array] = None,
+                relu: bool = True) -> jax.Array:
+    """x [H,W,Cin]; w [Cin,Cout]; b [Cout] or None -> [H,W,Cout]."""
+    H, W, Cin = x.shape
+    y = x.reshape(H * W, Cin).astype(jnp.float32) @ w.astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.reshape(H, W, -1).astype(x.dtype)

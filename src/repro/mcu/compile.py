@@ -1,0 +1,447 @@
+"""Compiled arena executor: lower a scheduled graph + arena plan to ONE
+jitted JAX program.
+
+The paper's offline artefacts — a schedule (the operator order) and an
+``ArenaPlan`` (a byte offset per tensor) — fully determine the runtime: what
+ships to the device is a straight-line program over a single SRAM arena.
+``MicroInterpreter`` executes that program as a Python loop with per-op
+dispatch, which validates the memory model but is orders of magnitude slower
+than the hardware.  ``compile_schedule`` closes the gap the way Pex and
+MCUNet pair their planners with a compiled runtime:
+
+* the whole arena is **one buffer** (``plan.arena_size`` elements; the
+  paper's int8 byte accounting maps one modelled byte to one arena element,
+  executed in the simulator's f32 numerics).  The jitted program takes the
+  arena and returns the arena, and is jitted with ``donate_argnums=0`` so
+  XLA updates it in place — the jit-level equivalent of a Pallas kernel's
+  ``input_output_aliases``;
+* each operator becomes a static slice-read of its inputs at their
+  ``Placement`` offsets, a lowering rule (see the registry below), and a
+  ``dynamic_update_slice`` of the output at its offset.  The plan's
+  disjointness invariant (overlapping lifetimes ⇒ disjoint ranges) is what
+  makes this sound;
+* inplace chains (partial execution's incremental ``pex_concat``) alias to
+  one offset in the plan, so the read-modify-write at that offset **is** the
+  shared accumulator buffer — no copies materialise after XLA's donation;
+* runs of uniform Pex slices are rolled into a ``lax.fori_loop`` whose body
+  indexes per-iteration offsets/row-starts from closed-over arrays — the
+  compiled program stays O(segment) in code size instead of O(K · segment).
+
+Lowering rules are registered per operator ``kind`` next to the semantics
+(``graphs/cnn_ops.py`` registers conv/dwconv/maxpool/add, optionally routing
+the MCU-shaped NHWC pointwise conv through the Pallas fused kernel under
+``kernels/``); ``pex_slice``/``pex_concat`` are lowered here from the
+structured attrs the partition rewrite records, because their simulator
+closures are numpy and cannot be traced.  Any kind without a rule falls back
+to tracing ``op.fn`` — every jnp-based simulator semantic is jit-compatible.
+
+Numerics contract: with ``use_pallas=False`` (default) the lowering traces
+the same jnp/lax computations the interpreter runs eagerly, so outputs are
+bit-identical (property-tested in ``tests/test_executor_diff.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.allocator import ArenaPlan, ArenaPlanner
+from repro.core.graph import Graph, Operator
+
+# ``optimization_barrier`` (the fence strict mode places between operators,
+# see ``compile_schedule``) has no vmap batching rule in this jax version,
+# which would break micro-batched serving (vmap over stacked arenas).  The
+# barrier is semantically the identity, so batching is a pass-through.
+try:  # pragma: no cover - exercised via serving vmap tests
+    from jax._src.lax.lax import optimization_barrier_p
+    from jax.interpreters import batching
+
+    if optimization_barrier_p not in batching.primitive_batchers:
+        def _optimization_barrier_batcher(args, dims, **params):
+            return optimization_barrier_p.bind(*args, **params), dims
+
+        batching.primitive_batchers[optimization_barrier_p] = \
+            _optimization_barrier_batcher
+except Exception:            # private path moved: only fuse=True vmaps
+    pass
+
+
+# ----------------------------------------------------------- lowering registry
+@dataclasses.dataclass
+class LoweringCtx:
+    """What a lowering rule may ask about the graph being compiled."""
+
+    graph: Graph
+    use_pallas: bool = False
+    interpret: Optional[bool] = None   # Pallas interpret override (None=auto)
+
+    def shape(self, tensor: str) -> Tuple[int, ...]:
+        t = self.graph.tensors[tensor]
+        return tuple(t.shape) if t.shape else (t.size,)
+
+
+_RULES: Dict[str, Callable[..., Any]] = {}
+
+
+def register_lowering(kind: str):
+    """Register ``fn(ctx, op, *inputs) -> output`` as the compiled lowering
+    for operators of ``kind``.  Rules live next to the op semantics."""
+    def deco(fn):
+        _RULES[kind] = fn
+        return fn
+    return deco
+
+
+def _fallback(ctx: LoweringCtx, op: Operator, *args):
+    if op.fn is None:
+        raise ValueError(
+            f"operator {op.name!r} (kind={op.kind!r}) has neither a lowering "
+            f"rule nor executable semantics")
+    return op.fn(*args)
+
+
+def lower_op(ctx: LoweringCtx, op: Operator, *args):
+    return _RULES.get(op.kind, _fallback)(ctx, op, *args)
+
+
+@register_lowering("pex_slice")
+def _lower_pex_slice(ctx: LoweringCtx, op: Operator, x):
+    rows = op.attrs.get("pex_rows")
+    if rows is None:                    # pre-metadata graph: trace the closure
+        return _fallback(ctx, op, x)
+    lo, hi = rows
+    return lax.slice_in_dim(x, lo, hi, axis=0)
+
+
+@register_lowering("pex_concat")
+def _lower_pex_concat(ctx: LoweringCtx, op: Operator, *args):
+    start = op.attrs.get("pex_start")
+    if start is None:
+        return _fallback(ctx, op, *args)
+    if op.attrs.get("pex_first"):
+        (part,) = args
+        acc = jnp.zeros(ctx.shape(op.output), part.dtype)
+    else:
+        acc, part = args
+    idx = (start,) + (0,) * (np.ndim(part) - 1)
+    return lax.dynamic_update_slice(acc, part, idx)
+
+
+# ------------------------------------------------------- pex fori_loop rolling
+def _roll_key(ctx: LoweringCtx, op: Operator):
+    """Hashable description of what an op *computes* (not where its tensors
+    live).  Two ops with equal keys run the same program on same-shaped data,
+    so consecutive slices whose keys match position-for-position can share
+    one fori_loop body.  ``None`` = not rollable."""
+    ins = tuple(ctx.shape(i) for i in op.inputs)
+    outs = ctx.shape(op.output)
+    a = op.attrs
+    if op.kind == "pex_slice":
+        if "pex_rows" not in a:
+            return None
+        lo, hi = a["pex_rows"]
+        return ("pex_slice", hi - lo, ins, outs)
+    if op.kind == "pex_concat":
+        if "pex_start" not in a:
+            return None
+        return ("pex_concat", bool(a.get("pex_first")), ins, outs)
+    if "pex_of" in a and "pex_pads" in a:
+        return (op.kind, a["pex_of"], tuple(a["pex_pads"]), ins, outs)
+    return None
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Where one operand lives, across the iterations of a rolled loop."""
+
+    offset: Any                 # int (static) or jnp int32 array [n] (param)
+    size: int
+    shape: Tuple[int, ...]
+
+    @property
+    def static(self) -> bool:
+        return isinstance(self.offset, int)
+
+
+@dataclasses.dataclass
+class _Template:
+    op: Operator                       # representative (first iteration's op)
+    in_slots: List[_Slot]
+    out_slot: _Slot
+    lo: Optional[Any] = None           # pex_slice: row start per iteration
+    start: Optional[Any] = None        # pex_concat: write start per iteration
+
+
+@dataclasses.dataclass
+class _RolledLoop:
+    templates: List[_Template]
+    n: int
+
+
+def _slice_groups(sched: Sequence[Operator]):
+    """Split the schedule into maximal runs of ops tagged with the same
+    (segment, slice index); untagged ops stand alone."""
+    groups: List[Tuple[Optional[str], Optional[int], List[Operator]]] = []
+    for op in sched:
+        seg = op.attrs.get("pex_seg")
+        s = op.attrs.get("pex_slice_idx")
+        if (seg is not None and groups and groups[-1][0] == seg
+                and groups[-1][1] == s):
+            groups[-1][2].append(op)
+        else:
+            groups.append((seg, s, [op]))
+    return groups
+
+
+def _build_loop(ctx: LoweringCtx, offsets: Dict[str, Tuple[int, int]],
+                run: List[List[Operator]]) -> Optional[_RolledLoop]:
+    """Merge ≥2 structurally-identical slice groups into one fori_loop.
+    Returns None when any operand breaks the uniformity conditions."""
+    n = len(run)
+    templates: List[_Template] = []
+    for d in range(len(run[0])):
+        ops = [g[d] for g in run]
+        rep = ops[0]
+        in_slots: List[_Slot] = []
+        for j in range(len(rep.inputs)):
+            names = [o.inputs[j] for o in ops]
+            shape = ctx.shape(names[0])
+            sizes = {offsets[nm][1] for nm in names}
+            if len(sizes) != 1:
+                return None
+            size = sizes.pop()
+            if all(nm == names[0] for nm in names):
+                in_slots.append(_Slot(offsets[names[0]][0], size, shape))
+            else:
+                offs = jnp.asarray([offsets[nm][0] for nm in names],
+                                   jnp.int32)
+                in_slots.append(_Slot(offs, size, shape))
+        onames = [o.output for o in ops]
+        osizes = {offsets[nm][1] for nm in onames}
+        if len(osizes) != 1:
+            return None
+        tpl = _Template(rep, in_slots,
+                        _Slot(jnp.asarray([offsets[nm][0] for nm in onames],
+                                          jnp.int32),
+                              osizes.pop(), ctx.shape(onames[0])))
+        if rep.kind == "pex_slice":
+            tpl.lo = jnp.asarray([o.attrs["pex_rows"][0] for o in ops],
+                                 jnp.int32)
+        elif rep.kind == "pex_concat":
+            tpl.start = jnp.asarray([o.attrs["pex_start"] for o in ops],
+                                    jnp.int32)
+        templates.append(tpl)
+    return _RolledLoop(templates, n)
+
+
+def _plan_items(ctx: LoweringCtx, offsets: Dict[str, Tuple[int, int]],
+                sched: Sequence[Operator], roll_loops: bool) -> List[Any]:
+    """The compiled program structure: a list of Operators (straight-line
+    steps) and _RolledLoops."""
+    if not roll_loops:
+        return list(sched)
+    items: List[Any] = []
+    groups = _slice_groups(sched)
+    i = 0
+    while i < len(groups):
+        seg, s, ops = groups[i]
+        key = (None if seg is None
+               else tuple(_roll_key(ctx, op) for op in ops))
+        if seg is None or key is None or any(k is None for k in key):
+            items.extend(ops)
+            i += 1
+            continue
+        run = [ops]
+        j = i + 1
+        while j < len(groups):
+            seg2, s2, ops2 = groups[j]
+            if (seg2 != seg or s2 != s + (j - i)
+                    or len(ops2) != len(ops)
+                    or tuple(_roll_key(ctx, op) for op in ops2) != key):
+                break
+            run.append(ops2)
+            j += 1
+        loop = _build_loop(ctx, offsets, run) if len(run) >= 2 else None
+        if loop is None:
+            items.extend(ops)
+            i += 1
+        else:
+            items.append(loop)
+            i = j
+    return items
+
+
+# ------------------------------------------------------------------- executor
+@dataclasses.dataclass
+class CompiledExecutor:
+    """A scheduled graph lowered to one jitted arena program.
+
+    ``raw_fn(arena) -> arena`` is the pure staged program (composable under
+    ``jax.vmap`` for micro-batched serving); ``fn`` is its jitted,
+    donated-argument form.  ``arena_size`` equals ``plan.arena_size`` — the
+    program never reads or writes past it.
+    """
+
+    graph: Graph
+    schedule: List[Operator]
+    plan: ArenaPlan
+    arena_size: int
+    dtype: Any
+    raw_fn: Callable[[Any], Any]
+    fn: Callable[[Any], Any]
+    rolled_loops: int
+    rolled_ops: int
+    steps: int
+    offsets: Dict[str, Tuple[int, int]]    # tensor -> (offset, size)
+
+    def _offsets(self, tensor: str) -> Tuple[int, int]:
+        return self.offsets[tensor]
+
+    def make_arena(self, inputs: Dict[str, Any]):
+        """Fresh arena with the graph inputs written at their offsets."""
+        g = self.graph
+        needed = {c for c in g.constants() if g.consumers(c)}
+        missing = needed - set(inputs)
+        if missing:
+            raise ValueError(f"missing graph inputs: {sorted(missing)}")
+        arena = jnp.zeros((self.arena_size,), self.dtype)
+        for name, value in inputs.items():
+            if name not in g.tensors:
+                raise ValueError(f"unknown tensor {name!r}")
+            if g.producer(name) is not None:
+                raise ValueError(f"{name!r} is not a graph input")
+            if not g.consumers(name):
+                continue       # unused input: not arena-resident in the plan
+            off, size = self._offsets(name)
+            flat = jnp.ravel(jnp.asarray(value)).astype(self.dtype)
+            if flat.shape[0] != size:
+                raise ValueError(
+                    f"input {name!r}: got {flat.shape[0]} elements, "
+                    f"plan expects {size}")
+            arena = lax.dynamic_update_slice(arena, flat, (off,))
+        return arena
+
+    def outputs_from(self, arena, as_numpy: bool = True) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for o in self.graph.outputs:
+            off, size = self._offsets(o)
+            t = self.graph.tensors[o]
+            shape = tuple(t.shape) if t.shape else (size,)
+            val = arena[off:off + size].reshape(shape)
+            out[o] = np.asarray(val) if as_numpy else val
+        return out
+
+    def run(self, inputs: Dict[str, Any], as_numpy: bool = True
+            ) -> Dict[str, Any]:
+        arena = self.fn(self.make_arena(inputs))
+        return self.outputs_from(arena, as_numpy)
+
+
+def compile_schedule(graph: Graph,
+                     schedule: Optional[Sequence[Operator]] = None,
+                     plan: Optional[ArenaPlan] = None, *,
+                     dtype: Any = jnp.float32,
+                     use_pallas: bool = False,
+                     interpret: Optional[bool] = None,
+                     roll_loops: bool = True,
+                     fuse: bool = False,
+                     donate: bool = True) -> CompiledExecutor:
+    """Lower ``schedule`` (default: the graph's embedded order) against
+    ``plan`` (default: ``ArenaPlanner.plan``) into a single jitted arena
+    program.  See the module docstring for the lowering model.
+
+    ``fuse=False`` (default) pins an ``optimization_barrier`` after every
+    operator, reproducing the per-operator module boundaries of eager
+    dispatch — an MCU runtime materialises each output into the arena the
+    same way — which keeps compiled outputs bit-identical to the
+    interpreter.  ``fuse=True`` lets XLA fuse across operators: fastest,
+    but float results may drift within accumulation tolerance."""
+    sched = list(schedule) if schedule is not None else graph.default_schedule()
+    if not graph.is_valid_schedule(sched):
+        raise ValueError("invalid schedule for this graph")
+    if plan is None:
+        plan = ArenaPlanner.plan(graph, sched)
+    offsets = {p.tensor: (p.offset, p.size) for p in plan.placements}
+    for op in sched:
+        for t in list(op.inputs) + [op.output]:
+            if t not in offsets:
+                raise KeyError(f"tensor {t!r} missing from the arena plan")
+    ctx = LoweringCtx(graph, use_pallas=use_pallas, interpret=interpret)
+    items = _plan_items(ctx, offsets, sched, roll_loops)
+
+    def read(arena, name: str):
+        off, size = offsets[name]
+        return arena[off:off + size].reshape(ctx.shape(name))
+
+    def write(arena, name: str, val):
+        off, size = offsets[name]
+        flat = jnp.ravel(val).astype(arena.dtype)
+        if flat.shape[0] != size:     # static shape: checked at trace time
+            raise ValueError(
+                f"{name}: lowered output has {flat.shape[0]} elements, "
+                f"plan expects {size}")
+        return lax.dynamic_update_slice(arena, flat, (off,))
+
+    def barrier(arena):
+        return arena if fuse else lax.optimization_barrier(arena)
+
+    def step(arena, op: Operator):
+        args = [read(arena, i) for i in op.inputs]
+        return barrier(write(arena, op.output, lower_op(ctx, op, *args)))
+
+    def loop_step(arena, loop: _RolledLoop):
+        def body(i, arena):
+            for tpl in loop.templates:
+                args = []
+                for slot in tpl.in_slots:
+                    if slot.static:
+                        v = arena[slot.offset:slot.offset + slot.size]
+                    else:
+                        v = lax.dynamic_slice(arena, (slot.offset[i],),
+                                              (slot.size,))
+                    args.append(v.reshape(slot.shape))
+                op = tpl.op
+                if tpl.lo is not None:            # pex_slice, dynamic rows
+                    x = args[0]
+                    rows = tpl.out_slot.shape[0]
+                    idx = (tpl.lo[i],) + (0,) * (x.ndim - 1)
+                    out = lax.dynamic_slice(x, idx,
+                                            (rows,) + x.shape[1:])
+                elif tpl.start is not None:       # pex_concat, dynamic start
+                    acc, part = args
+                    idx = (tpl.start[i],) + (0,) * (part.ndim - 1)
+                    out = lax.dynamic_update_slice(acc, part, idx)
+                else:
+                    out = lower_op(ctx, op, *args)
+                flat = jnp.ravel(out).astype(arena.dtype)
+                if tpl.out_slot.static:
+                    arena = lax.dynamic_update_slice(
+                        arena, flat, (tpl.out_slot.offset,))
+                else:
+                    arena = lax.dynamic_update_slice(
+                        arena, flat, (tpl.out_slot.offset[i],))
+                arena = barrier(arena)
+            return arena
+        return lax.fori_loop(0, loop.n, body, arena)
+
+    def raw_fn(arena):
+        for item in items:
+            if isinstance(item, _RolledLoop):
+                arena = loop_step(arena, item)
+            else:
+                arena = step(arena, item)
+        return arena
+
+    fn = jax.jit(raw_fn, donate_argnums=0) if donate else jax.jit(raw_fn)
+    loops = [it for it in items if isinstance(it, _RolledLoop)]
+    return CompiledExecutor(
+        graph=graph, schedule=sched, plan=plan,
+        arena_size=int(plan.arena_size), dtype=dtype,
+        raw_fn=raw_fn, fn=fn,
+        rolled_loops=len(loops),
+        rolled_ops=sum(l.n * len(l.templates) for l in loops),
+        steps=len(sched), offsets=offsets)

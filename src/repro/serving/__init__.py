@@ -1,3 +1,4 @@
-from .engine import Request, RequestResult, ServingEngine
+from .engine import (GraphServingEngine, Request, RequestResult,
+                     ServingEngine)
 
-__all__ = ["Request", "RequestResult", "ServingEngine"]
+__all__ = ["GraphServingEngine", "Request", "RequestResult", "ServingEngine"]

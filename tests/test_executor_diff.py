@@ -1,0 +1,157 @@
+"""Differential suite: compiled arena executor vs the micro-interpreter.
+
+The compiled executor (one jitted program over one arena buffer) must be
+**bit-identical** to the Python-loop ``MicroInterpreter`` under both of the
+interpreter's allocators — the §4 dynamic first-fit+defrag allocator and
+§6 plan-mode execution against precomputed offsets — across the paper
+graphs × {default, greedy, exact/contracted, pex} schedules, and must
+execute against exactly ``plan.arena_size`` elements.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ArenaPlanner, greedy_schedule, partition_graph, schedule
+from repro.core.graph import Graph
+from repro.graphs import (figure1_executable_graph, mobilenet_v1_graph,
+                          random_input, swiftnet_cell_graph)
+from repro.graphs.cnn_ops import CNNBuilder
+from repro.mcu import MicroInterpreter, compile_schedule
+from repro.serving import GraphServingEngine
+
+
+def _tiny_cnn() -> Graph:
+    """A small branchy CNN covering every builder kind (fast tier)."""
+    g = Graph()
+    b = CNNBuilder(g)
+    x = b.input("input", 16, 16, 3)
+    x = b.conv(x, 8, k=3)
+    a = b.conv(x, 8, k=1)
+    a = b.dwconv(a, k=3)
+    bb = b.maxpool(x, k=2, stride=2)
+    bb = b.conv(bb, 8, k=1)
+    # bring branch b back to a's resolution via a second maxpool on a
+    a = b.maxpool(a, k=2, stride=2)
+    y = b.add(a, bb)
+    y = b.concat([y, bb])
+    y = b.avgpool(y)
+    y = b.fc(y, 4)
+    g.set_outputs([y])
+    return g
+
+
+_GRAPHS = {
+    "figure1": figure1_executable_graph,
+    "tiny_cnn": _tiny_cnn,
+    "mobilenet": mobilenet_v1_graph,
+    "swiftnet": swiftnet_cell_graph,
+}
+
+
+def _schedule_cases(g: Graph):
+    """(label, schedule, graph-the-schedule-belongs-to) for the diff grid."""
+    cases = [("default", g.default_schedule(), g),
+             ("greedy", greedy_schedule(g).schedule, g)]
+    res = schedule(g)                      # exact / contracted / beam winner
+    cases.append((res.method, res.schedule, g))
+    pres = schedule(g, partition=True)     # partial-execution rewrite
+    gp = pres.graph if pres.graph is not None else g
+    cases.append((f"pex:{pres.method}", pres.schedule, gp))
+    return cases
+
+
+@pytest.mark.parametrize("name", [
+    "figure1",
+    "tiny_cnn",
+    "mobilenet",
+    pytest.param("swiftnet", marks=pytest.mark.slow),
+])
+def test_compiled_bit_identical_and_arena_exact(name):
+    g = _GRAPHS[name]()
+    x = random_input(g)
+    ref = MicroInterpreter(g).run(x)       # embedded order, dynamic allocator
+    for label, sched, gx in _schedule_cases(g):
+        plan = ArenaPlanner.plan(gx, sched)
+        ArenaPlanner.validate(plan)
+        rep_dyn = MicroInterpreter(gx).run(x, schedule=sched)
+        rep_plan = MicroInterpreter(gx).run(x, schedule=sched, plan=plan)
+        ex = compile_schedule(gx, sched, plan)
+        out = ex.run(x)
+        for o in g.outputs:
+            np.testing.assert_array_equal(
+                ref.outputs[o], rep_dyn.outputs[o],
+                err_msg=f"{name}/{label}: dynamic interpreter drifted")
+            np.testing.assert_array_equal(
+                rep_dyn.outputs[o], rep_plan.outputs[o],
+                err_msg=f"{name}/{label}: plan-mode interpreter drifted")
+            np.testing.assert_array_equal(
+                rep_dyn.outputs[o], out[o],
+                err_msg=f"{name}/{label}: compiled executor drifted")
+        # the executor's whole memory is the plan's arena, exactly
+        assert ex.arena_size == plan.arena_size
+        assert rep_plan.peak_sram <= plan.arena_size
+
+
+def test_pex_slices_roll_into_fori_loops():
+    """Uniform Pex slices must compile to fori_loops (code size stays
+    O(segment), not O(K * segment)) — and stay bit-identical."""
+    g = mobilenet_v1_graph()
+    pr = partition_graph(g, budget=48 * 1024)
+    assert pr.segments, "partition must trigger on a 48KB budget"
+    gp = pr.graph
+    sched = gp.default_schedule()          # insertion order = pex order
+    ex = compile_schedule(gp, sched)
+    assert ex.rolled_loops > 0
+    assert ex.rolled_ops > 0
+    x = random_input(g)
+    ref = MicroInterpreter(gp).run(x, schedule=sched)
+    out = ex.run(x)
+    for o in g.outputs:
+        np.testing.assert_array_equal(ref.outputs[o], out[o])
+    # rolling is an optimisation detail: unrolled must agree bit-for-bit
+    out_unrolled = compile_schedule(gp, sched, roll_loops=False).run(x)
+    for o in g.outputs:
+        np.testing.assert_array_equal(out[o], out_unrolled[o])
+
+
+def test_compiled_pallas_conv_within_tolerance():
+    """use_pallas routes MCU-shaped pointwise convs through the fused
+    Pallas kernel: fast path, float-tolerance (not bit) contract."""
+    g = _tiny_cnn()
+    x = random_input(g)
+    sched = schedule(g).schedule
+    ref = MicroInterpreter(g).run(x, schedule=sched)
+    ex = compile_schedule(g, sched, use_pallas=True, interpret=True)
+    out = ex.run(x)
+    for o in g.outputs:
+        np.testing.assert_allclose(ref.outputs[o], out[o],
+                                   rtol=2e-5, atol=1e-6)
+
+
+def test_graph_serving_engine_micro_batches():
+    g = _tiny_cnn()
+    eng = GraphServingEngine(g, micro_batch=2)
+    rng = np.random.default_rng(3)
+    reqs = [{"input": rng.standard_normal((16, 16, 3)).astype(np.float32)}
+            for _ in range(5)]
+    outs = eng.serve(reqs)
+    assert len(outs) == 5
+    assert eng.stats["micro_batches"] == 3
+    for r, o in zip(reqs, outs):
+        ref = MicroInterpreter(eng.exec_graph).run(
+            r, schedule=eng.result.schedule)
+        for name in g.outputs:
+            np.testing.assert_array_equal(ref.outputs[name], o[name])
+
+
+def test_compile_rejects_invalid_schedule():
+    g = _tiny_cnn()
+    sched = g.default_schedule()
+    with pytest.raises(ValueError):
+        compile_schedule(g, sched[::-1])
+
+
+def test_run_rejects_missing_input():
+    g = _tiny_cnn()
+    ex = compile_schedule(g)
+    with pytest.raises(ValueError, match="missing graph inputs"):
+        ex.run({})

@@ -1,0 +1,45 @@
+"""Golden regression tests pinning the headline memory numbers.
+
+These are the numbers DESIGN.md and the benchmarks advertise; a cost-model
+or scheduler regression must fail HERE, loudly, instead of silently
+inflating peaks until the capacity demos stop fitting.  All assertions are
+scheduling-only (no numerics), so they stay in the fast tier.
+"""
+from repro.core import ArenaPlanner, schedule
+from repro.graphs import figure1_graph, mobilenet_v1_graph
+from repro.graphs.figure1 import DEFAULT_PEAK, OPTIMAL_PEAK
+
+KB = 1024
+
+
+def test_figure1_peaks_exact():
+    g = figure1_graph()
+    assert g.peak_usage(g.default_schedule()) == DEFAULT_PEAK == 5216
+    assert schedule(g).peak == OPTIMAL_PEAK == 4960
+
+
+def test_mobilenet_100_192_headline():
+    """The paper-sequel headline: 864 KB reorder-only; <= 330 KB (measured
+    315 KB) with reorder + partial execution — fits a 512 KB arena."""
+    g = mobilenet_v1_graph(alpha=1.0, resolution=192)
+    base = schedule(g)
+    assert base.peak == 864 * KB            # 884736 B, reorder-only floor
+    res = schedule(g, arena_budget=512 * KB)
+    gp = res.graph if res.graph is not None else g
+    plan = ArenaPlanner.plan(gp, res.schedule)
+    ArenaPlanner.validate(plan)
+    assert res.peak <= 330 * KB
+    assert plan.arena_size <= 330 * KB
+    assert plan.arena_size <= 512 * KB      # the capacity demo itself
+
+
+def test_mobilenet_050_192_fits_256K():
+    g = mobilenet_v1_graph(alpha=0.5, resolution=192)
+    base = schedule(g)
+    assert base.peak > 256 * KB             # reorder alone cannot fit
+    res = schedule(g, arena_budget=256 * KB)
+    gp = res.graph if res.graph is not None else g
+    plan = ArenaPlanner.plan(gp, res.schedule)
+    ArenaPlanner.validate(plan)
+    assert res.peak <= 256 * KB
+    assert plan.arena_size <= 256 * KB

@@ -97,3 +97,26 @@ def test_decode_attention_single_valid_row():
     got = decode_attention(q, kc, vc, lengths, bs=64, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(vc[:, 0]),
                                rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------- fused pointwise conv kernel
+from repro.kernels import conv1x1_fused
+from repro.kernels.conv_pointwise.ref import conv1x1_ref
+
+
+@pytest.mark.parametrize("H,W,Cin,Cout,block_rows", [
+    (12, 12, 64, 128, 64),                  # MCU-shaped, uneven row blocks
+    pytest.param(24, 24, 32, 64, 256, marks=pytest.mark.slow),
+    pytest.param(7, 9, 3, 8, 16, marks=pytest.mark.slow),   # ragged padding
+])
+@pytest.mark.parametrize("bias,relu", [(True, True), (False, False)])
+def test_conv1x1_fused_matches_ref(H, W, Cin, Cout, block_rows, bias, relu):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = rand(ks[0], (H, W, Cin), jnp.float32)
+    w = rand(ks[1], (Cin, Cout), jnp.float32) * 0.1
+    b = rand(ks[2], (Cout,), jnp.float32) if bias else None
+    got = conv1x1_fused(x, w, b, relu=relu, block_rows=block_rows,
+                        interpret=True)
+    want = conv1x1_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-6)

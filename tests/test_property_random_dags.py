@@ -1,0 +1,88 @@
+"""Property tests (hypothesis) for the schedulers over random DAGs.
+
+Sound ordering invariants:
+
+* ``schedule()`` never returns a peak above the embedded (default) order —
+  the tool must never make a model worse;
+* the exact DP lower-bounds every heuristic: ``exact <= contracted`` (the
+  contracted DP optimises over the subset of schedules that run each chain
+  contiguously) and ``exact <= greedy``.
+
+Note the deliberately *omitted* ``contracted <= greedy``: it is false in
+general — greedy may interleave chains to free a held tensor mid-chain,
+which the contracted DP cannot express.  Random sampling finds
+counterexamples at about a 2% rate (e.g. contracted 120 vs greedy 102 on an
+8-op DAG), so the suite pins only the sound direction.
+
+Every schedule any method returns must pass ``graph.is_valid_schedule``.
+"""
+from hypothesis_compat import given, settings, st
+
+from repro.core import (Graph, beam_schedule, greedy_schedule,
+                        minimise_peak_memory,
+                        minimise_peak_memory_contracted, schedule)
+
+
+def _build_dag(n_inputs, sizes, wiring):
+    """Deterministic DAG from drawn data.  ``wiring[i]`` picks operator
+    i's inputs (indices into the tensors created so far, modulo-folded so
+    any drawn integers are valid)."""
+    g = Graph()
+    tensors = []
+    for i in range(n_inputs):
+        g.add_tensor(f"c{i}", sizes[i % len(sizes)])
+        tensors.append(f"c{i}")
+    for i, picks in enumerate(wiring):
+        ins = sorted({tensors[p % len(tensors)] for p in picks})
+        out = f"t{i}"
+        g.add_tensor(out, sizes[(n_inputs + i) % len(sizes)])
+        g.add_operator(f"op{i}", ins, out)
+        tensors.append(out)
+    sinks = [t for t in g.tensors
+             if not g.consumers(t) and g.producer(t) is not None]
+    g.set_outputs(sinks or [tensors[-1]])
+    return g
+
+
+@st.composite
+def dags(draw):
+    n_inputs = draw(st.integers(min_value=1, max_value=2))
+    n_ops = draw(st.integers(min_value=2, max_value=8))
+    sizes = draw(st.lists(st.integers(min_value=1, max_value=64),
+                          min_size=3, max_size=6))
+    wiring = [draw(st.lists(st.integers(min_value=0, max_value=9),
+                            min_size=1, max_size=2))
+              for _ in range(n_ops)]
+    return _build_dag(n_inputs, sizes, wiring)
+
+
+@given(dags())
+@settings(max_examples=30, deadline=None)
+def test_schedule_never_worse_than_default(g):
+    default_peak = g.peak_usage(g.default_schedule())
+    res = schedule(g)
+    assert g.is_valid_schedule(res.schedule)
+    assert res.peak <= default_peak
+    assert g.peak_usage(res.schedule) == res.peak
+
+
+@given(dags())
+@settings(max_examples=30, deadline=None)
+def test_exact_lower_bounds_heuristics(g):
+    exact = minimise_peak_memory(g)
+    greedy = greedy_schedule(g)
+    assert g.is_valid_schedule(exact.schedule)
+    assert g.is_valid_schedule(greedy.schedule)
+    assert exact.peak <= greedy.peak
+    contracted = minimise_peak_memory_contracted(g)
+    if contracted is not None:
+        assert g.is_valid_schedule(contracted.schedule)
+        assert exact.peak <= contracted.peak
+
+
+@given(dags())
+@settings(max_examples=15, deadline=None)
+def test_beam_returns_valid_schedule(g):
+    res = beam_schedule(g, width=8)
+    assert g.is_valid_schedule(res.schedule)
+    assert res.peak >= minimise_peak_memory(g).peak
