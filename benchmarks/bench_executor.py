@@ -1,5 +1,6 @@
 """Compiled arena executor vs the Python-loop MicroInterpreter: us/call on
-figure1 and MobileNet-{0.5,1.0}@192, reorder-only and reorder+pex.
+figure1 and MobileNet-{0.5,1.0}@192, reorder-only and reorder+pex, at both
+element widths (float32 and post-training int8).
 
 Two interpreter numbers are reported, because they answer different
 questions on this (server-CPU) rig:
@@ -15,7 +16,8 @@ questions on this (server-CPU) rig:
   floor (~1.4x here); on MCU-class single-shot inference there is no warm
   process to amortise into.
 
-Output rows:
+Output rows (all byte figures are bytes; rows carry ``arena_bytes`` and
+``dtypes`` metadata into the --json trajectory):
     executor.<case>.interp_us        first interpreter pass (per-op dispatch)
     executor.<case>.interp_warm_us   warm interpreter pass
     executor.<case>.compiled_us      one jitted arena-program call (warm)
@@ -38,11 +40,13 @@ import time
 import numpy as np
 
 from repro.core import ArenaPlanner, schedule
-from repro.graphs import (figure1_executable_graph, mobilenet_v1_graph,
+from repro.graphs import (figure1_executable_graph, figure1_int8_graph,
+                          graph_dtypes, mobilenet_v1_graph, quantize_graph,
                           random_input)
 from repro.mcu import MicroInterpreter, compile_schedule
 
 KB = 1024
+MB = 1024 * KB
 _SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
 
 
@@ -50,8 +54,9 @@ def _case(report, name, g, cap=None, repeats=3):
     res = schedule(g, arena_budget=cap)
     gp = res.graph if res.graph is not None else g
     plan = ArenaPlanner.plan(gp, res.schedule)
-    ArenaPlanner.validate(plan)
+    ArenaPlanner.validate(plan, gp)
     x = random_input(g)
+    dtypes = graph_dtypes(g)
 
     interp = MicroInterpreter(gp)
     t0 = time.perf_counter()
@@ -71,24 +76,36 @@ def _case(report, name, g, cap=None, repeats=3):
     for o in g.outputs:                  # the executor must not drift
         np.testing.assert_array_equal(rep.outputs[o], out[o])
     speedup = interp_us / compiled_us
-    report(f"executor.{name}.interp_us", interp_us, res.peak)
-    report(f"executor.{name}.interp_warm_us", interp_warm_us, res.peak)
-    report(f"executor.{name}.compiled_us", compiled_us, plan.arena_size)
-    report(f"executor.{name}.speedup_x", compiled_us, round(speedup, 1))
-    report(f"executor.{name}.arena_B", compiled_us, plan.arena_size)
+    meta = dict(arena_bytes=int(plan.arena_size), dtypes=dtypes)
+    report(f"executor.{name}.interp_us", interp_us, res.peak, **meta)
+    report(f"executor.{name}.interp_warm_us", interp_warm_us, res.peak,
+           **meta)
+    report(f"executor.{name}.compiled_us", compiled_us, plan.arena_size,
+           **meta)
+    report(f"executor.{name}.speedup_x", compiled_us, round(speedup, 1),
+           **meta)
+    report(f"executor.{name}.arena_B", compiled_us, plan.arena_size, **meta)
     return speedup
 
 
+def _quantized_mobilenet(**kw):
+    g = mobilenet_v1_graph(**kw)
+    return quantize_graph(g, random_input(g)).graph
+
+
 def _headline_cases(report):
-    """The MobileNet@192 sweep; asserts the >=5x acceptance bar."""
+    """The MobileNet@192 sweep; asserts the >=5x acceptance bar.  The f32
+    builds carry 4 bytes per element since the byte-granular refactor, so
+    the pex budgets are the old element budgets x4; the int8 build is the
+    one that meets real MCU byte budgets (see bench_pex)."""
     _case(report, "mobilenet_050_192.reorder",
           mobilenet_v1_graph(alpha=0.5, resolution=192))
     _case(report, "mobilenet_050_192.pex",
-          mobilenet_v1_graph(alpha=0.5, resolution=192), cap=256 * KB)
+          mobilenet_v1_graph(alpha=0.5, resolution=192), cap=1 * MB)
     _case(report, "mobilenet_100_192.reorder",
           mobilenet_v1_graph(alpha=1.0, resolution=192))
     s = _case(report, "mobilenet_100_192.pex",
-              mobilenet_v1_graph(alpha=1.0, resolution=192), cap=512 * KB)
+              mobilenet_v1_graph(alpha=1.0, resolution=192), cap=2 * MB)
     assert s >= 5.0, f"compiled executor only {s:.1f}x over the interpreter"
 
 
@@ -103,7 +120,9 @@ def _parse_derived(text):
 
 def run(report):
     _case(report, "figure1", figure1_executable_graph(), repeats=20)
+    _case(report, "figure1_int8", figure1_int8_graph(), repeats=20)
     _case(report, "mobilenet_025_96", mobilenet_v1_graph())
+    _case(report, "mobilenet_025_96_int8", _quantized_mobilenet())
     if _SMOKE:
         return
     # fresh process: see module docstring
@@ -112,13 +131,14 @@ def run(report):
     for line in proc.stdout.splitlines():
         if line.startswith("executor."):
             name, us, derived = line.split(",")
-            report(name, float(us), _parse_derived(derived))
+            report(name, float(us), _parse_derived(derived),
+                   dtypes="float32")
     if proc.returncode != 0:
         raise RuntimeError(
             f"headline subprocess failed:\n{proc.stdout}\n{proc.stderr}")
 
 
 if __name__ == "__main__":
-    def _report(name, us_per_call, derived):
+    def _report(name, us_per_call, derived, **meta):
         print(f"{name},{us_per_call:.1f},{derived}")
     _headline_cases(_report)

@@ -4,7 +4,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import decode_attention, flash_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref

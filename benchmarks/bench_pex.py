@@ -1,48 +1,58 @@
 """Partial execution (Pex) benchmark: peak SRAM for {static allocation,
-reorder-only, reorder + partial execution} across the paper graphs, plus the
-headline capacity demos — models that fit a 512 KB (and a stretch 256 KB)
-arena with reorder+partial but **cannot** with reordering alone.
+reorder-only, reorder + partial execution} across the paper graphs, plus
+the headline capacity demos.
 
-Output rows (bytes):
+Since the byte-granular dtype refactor the float builds carry honest
+4-byte elements, so the MCU capacity demos run on the **int8** models
+(``quantize_graph`` / ``int8_scheduling_graph`` — byte-identical sizes):
+MobileNet-1.0@192 fits a 512 KB arena with int8+reorder+pex (f32
+reorder-only needs 3456 KB, int8 reorder-only 864 KB) and
+MobileNet-0.5@192 fits the 256 KB stretch target.  Numeric bit-identity of
+the partitioned int8 model is asserted through the micro-interpreter on
+the person-detection build (0.25@96) — partial execution must not change
+quantized numerics either.
+
+Output rows (bytes; ``dtypes`` metadata tags the element width):
     pex.<graph>.static_B            all-tensors-resident planning
     pex.<graph>.reorder_B           best reordered schedule, whole operators
     pex.<graph>.reorder_partial_B   reordering over the partitioned graph
     pex.<graph>.arena_plan_B        offline arena plan of the winning schedule
-
-The capacity demos execute both graphs through the micro-interpreter and
-assert bit-identical outputs — partial execution must not change numerics.
 """
 import time
 
 import numpy as np
 
 from repro.core import ArenaPlanner, schedule, static_plan_size
-from repro.graphs import (figure1_graph, mobilenet_v1_graph,
-                          swiftnet_cell_graph)
+from repro.graphs import (figure1_graph, graph_dtypes,
+                          int8_scheduling_graph, mobilenet_v1_graph,
+                          quantize_graph, random_input, swiftnet_cell_graph)
 from repro.mcu import MicroInterpreter
 
 KB = 1024
 
 
-def _case(report, name, g, cap=None):
+def _case(report, name, g, cap=None, dtypes=None):
+    if dtypes is None:
+        dtypes = graph_dtypes(g)
     t0 = time.perf_counter()
     base = schedule(g)
     res = schedule(g, arena_budget=cap, partition=cap is None)
     dt = (time.perf_counter() - t0) * 1e6
     gp = res.graph if res.graph is not None else g
     plan = ArenaPlanner.plan(gp, res.schedule)
-    ArenaPlanner.validate(plan)
-    report(f"pex.{name}.static_B", dt, static_plan_size(g))
-    report(f"pex.{name}.reorder_B", dt, base.peak)
-    report(f"pex.{name}.reorder_partial_B", dt, res.peak)
-    report(f"pex.{name}.arena_plan_B", dt, plan.arena_size)
+    ArenaPlanner.validate(plan, gp)
+    report(f"pex.{name}.static_B", dt, static_plan_size(g),
+           arena_bytes=static_plan_size(g), dtypes=dtypes)
+    report(f"pex.{name}.reorder_B", dt, base.peak,
+           arena_bytes=base.peak, dtypes=dtypes)
+    report(f"pex.{name}.reorder_partial_B", dt, res.peak,
+           arena_bytes=res.peak, dtypes=dtypes)
+    report(f"pex.{name}.arena_plan_B", dt, plan.arena_size,
+           arena_bytes=int(plan.arena_size), dtypes=dtypes)
     return base, res, plan
 
 
-def _assert_bit_identical(g, res):
-    h, w, c = g.tensors["input"].shape
-    rng = np.random.default_rng(0)
-    x = {"input": rng.standard_normal((h, w, c)).astype(np.float32)}
+def _assert_bit_identical(g, res, x):
     ref = MicroInterpreter(g).run(x)
     got = MicroInterpreter(res.graph).run(x, schedule=res.schedule)
     for o in g.outputs:
@@ -51,28 +61,35 @@ def _assert_bit_identical(g, res):
 
 
 def run(report):
-    # ---- the paper graphs: partial execution composes with reordering
+    # ---- the paper graphs (f32): partial execution composes with reorder
     _case(report, "figure1", figure1_graph())          # too small to slice
     base, res, _ = _case(report, "mobilenet_025_96", mobilenet_v1_graph())
     assert res.peak < base.peak, "pure chain: partial execution must win"
     _case(report, "swiftnet_96", swiftnet_cell_graph())
 
-    # ---- headline: fits 512 KB only with reorder+partial ----------------
-    cap = 512 * KB
-    g = mobilenet_v1_graph(alpha=1.0, resolution=192)
-    base, res, plan = _case(report, "mobilenet_100_192", g, cap=cap)
-    assert base.peak > cap, "reorder-only must NOT fit 512 KB"
-    assert res.peak <= cap and plan.arena_size <= cap, "pex must fit 512 KB"
-    _assert_bit_identical(g, res)
-    report("pex.mobilenet_100_192.fits_512K", 0.0,
-           int(plan.arena_size <= cap))
+    # ---- int8 x reorder x pex composes bit-identically (person detection)
+    g = mobilenet_v1_graph()
+    qm = quantize_graph(g, random_input(g))
+    base, res, _ = _case(report, "mobilenet_025_96_int8", qm.graph)
+    assert res.peak < base.peak
+    assert res.graph is not None
+    _assert_bit_identical(qm.graph, res,
+                          qm.quantize_inputs(random_input(g)))
 
-    # ---- stretch: 256 KB ------------------------------------------------
+    # ---- headline: int8 fits 512 KB only with reorder+partial ----------
+    cap = 512 * KB
+    q = int8_scheduling_graph(mobilenet_v1_graph(alpha=1.0, resolution=192))
+    base, res, plan = _case(report, "mobilenet_100_192_int8", q, cap=cap)
+    assert base.peak > cap, "int8 reorder-only must NOT fit 512 KB"
+    assert res.peak <= cap and plan.arena_size <= cap, "pex must fit 512 KB"
+    report("pex.mobilenet_100_192_int8.fits_512K", 0.0,
+           int(plan.arena_size <= cap), dtypes="int8")
+
+    # ---- stretch: 256 KB -----------------------------------------------
     cap = 256 * KB
-    g = mobilenet_v1_graph(alpha=0.5, resolution=192)
-    base, res, plan = _case(report, "mobilenet_050_192", g, cap=cap)
-    assert base.peak > cap, "reorder-only must NOT fit 256 KB"
+    q = int8_scheduling_graph(mobilenet_v1_graph(alpha=0.5, resolution=192))
+    base, res, plan = _case(report, "mobilenet_050_192_int8", q, cap=cap)
+    assert base.peak > cap, "int8 reorder-only must NOT fit 256 KB"
     assert res.peak <= cap and plan.arena_size <= cap, "pex must fit 256 KB"
-    _assert_bit_identical(g, res)
-    report("pex.mobilenet_050_192.fits_256K", 0.0,
-           int(plan.arena_size <= cap))
+    report("pex.mobilenet_050_192_int8.fits_256K", 0.0,
+           int(plan.arena_size <= cap), dtypes="int8")

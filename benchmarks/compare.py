@@ -1,0 +1,126 @@
+"""CI benchmark-regression gate: diff a fresh ``run.py --json`` trajectory
+against the committed baseline and FAIL the workflow when the memory story
+regresses.
+
+Two gates, per row name present in both files:
+
+* **bytes (exact, strict)** — ``arena_bytes`` may never grow.  Arena/peak
+  sizes are deterministic scheduling artefacts, so any growth is a real
+  cost-model/scheduler/planner regression, never noise.
+* **time (tolerant)** — ``us_per_call`` may not regress more than
+  ``--us-tol`` (default 20%) plus an absolute ``--us-slack`` grace
+  (default 5000 us) that absorbs shared-runner jitter on sub-millisecond
+  rows.
+
+A baseline row missing from the fresh run is a coverage regression and
+fails; new rows are reported and pass (they enter the gate when the
+baseline is refreshed).  The committed baseline is an **envelope**: its
+``us_per_call`` is the max over several runs on the reference machine
+(first-call timings include JIT compiles and vary run-to-run), while its
+``arena_bytes`` are exact and identical across runs.  Refresh it by
+merging a few green fresh trajectories (max of us, assert bytes equal)
+over ``benchmarks/BENCH_baseline.json`` in the PR that deliberately moves
+the numbers.
+
+Usage:
+    python -m benchmarks.compare benchmarks/BENCH_baseline.json \\
+        BENCH_executor.json [--us-tol 0.2] [--us-slack 5000]
+"""
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+
+def load_rows(path: str) -> Tuple[Dict[str, dict], dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: r for r in payload["rows"]}, payload
+
+
+def compare_rows(
+    base: Dict[str, dict],
+    fresh: Dict[str, dict],
+    us_tol: float,
+    us_slack: float,
+) -> Tuple[List[str], List[str]]:
+    """(failures, notes) of diffing ``fresh`` against ``base``."""
+    failures: List[str] = []
+    notes: List[str] = []
+    for name, b in sorted(base.items()):
+        f = fresh.get(name)
+        if f is None:
+            failures.append(f"{name}: row missing from the fresh run (coverage regressed)")
+            continue
+        bb, fb = b.get("arena_bytes"), f.get("arena_bytes")
+        if bb is not None and fb is not None and fb > bb:
+            failures.append(f"{name}: arena/peak bytes grew {bb} -> {fb} (+{fb - bb} B)")
+        bus, fus = b.get("us_per_call"), f.get("us_per_call")
+        if bus is not None and fus is not None:
+            limit = bus * (1.0 + us_tol) + us_slack
+            if fus > limit:
+                failures.append(
+                    f"{name}: us/call regressed {bus:.0f} -> {fus:.0f} "
+                    f"(limit {limit:.0f} = baseline +{us_tol:.0%} +{us_slack:.0f}us)"
+                )
+        if b.get("dtypes") and f.get("dtypes") and b["dtypes"] != f["dtypes"]:
+            notes.append(f"{name}: dtypes changed {b['dtypes']} -> {f['dtypes']}")
+    for name in sorted(set(fresh) - set(base)):
+        notes.append(f"{name}: new row (not in baseline yet)")
+    return failures, notes
+
+
+def _fmt(value) -> str:
+    return "-" if value is None else f"{value:.0f}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("fresh", help="fresh run.py --json output")
+    ap.add_argument(
+        "--us-tol",
+        type=float,
+        default=0.2,
+        help="relative us/call regression tolerance (default 0.2 = 20%%)",
+    )
+    ap.add_argument(
+        "--us-slack",
+        type=float,
+        default=5000.0,
+        help="absolute us/call grace for runner jitter (default 5000 us)",
+    )
+    args = ap.parse_args(argv)
+
+    base, _ = load_rows(args.baseline)
+    fresh, fresh_payload = load_rows(args.fresh)
+    failures, notes = compare_rows(base, fresh, args.us_tol, args.us_slack)
+    if fresh_payload.get("failed"):
+        failures.append(f"fresh run reported failed benchmarks: {fresh_payload['failed']}")
+
+    width = max((len(n) for n in base), default=4) + 2
+    print(f"{'row':<{width}} {'base us':>10} {'fresh us':>10} {'base B':>10} {'fresh B':>10}")
+    for name, b in sorted(base.items()):
+        f = fresh.get(name, {})
+        print(
+            f"{name:<{width}} {_fmt(b.get('us_per_call')):>10} "
+            f"{_fmt(f.get('us_per_call')):>10} {_fmt(b.get('arena_bytes')):>10} "
+            f"{_fmt(f.get('arena_bytes')):>10}"
+        )
+    for n in notes:
+        print(f"NOTE: {n}")
+    if failures:
+        print(f"\nFAIL: {len(failures)} benchmark regression(s) vs {args.baseline}:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print(
+        f"\nOK: {len(base)} baseline rows hold "
+        f"(bytes exact, us within {args.us_tol:.0%} + {args.us_slack:.0f}us)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

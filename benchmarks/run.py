@@ -2,10 +2,17 @@
 # CSV rows, then the §Roofline aggregation from the dry-run artifacts.
 #
 #   --json PATH   also emit a machine-readable BENCH_executor.json-style
-#                 trajectory (name, us_per_call, derived, peak_bytes) so
-#                 future PRs have a perf baseline to diff against
+#                 trajectory (name, us_per_call, derived, arena_bytes,
+#                 dtypes) so future PRs have a perf baseline to diff
+#                 against (see benchmarks/compare.py for the CI gate)
 #   --only a,b    run only the named benchmarks (e.g. figure1,executor)
 #   --smoke       small-graph subset inside each benchmark (CI)
+#
+# Benchmarks call ``report(name, us_per_call, derived, **meta)``; the
+# recognised meta keys are ``arena_bytes`` (peak/arena BYTES — the unit is
+# part of the trajectory contract since the byte-granular dtype refactor)
+# and ``dtypes`` ("float32" / "int8" / "mixed"), so the trajectory stays
+# comparable across quantization changes.
 import argparse
 import json
 import os
@@ -52,8 +59,8 @@ def main(argv=None) -> None:
 
     rows = []
 
-    def report(name, us_per_call, derived):
-        rows.append((name, us_per_call, derived))
+    def report(name, us_per_call, derived, **meta):
+        rows.append((name, us_per_call, derived, meta))
         print(f"{name},{us_per_call:.1f},{derived}")
 
     failed = []
@@ -73,11 +80,21 @@ def main(argv=None) -> None:
                 "derived": derived if isinstance(derived, (int, float, str,
                                                            bool)) else
                 repr(derived),
-                "peak_bytes": derived if isinstance(derived, int)
-                and not isinstance(derived, bool) else None,
-            } for name, us, derived in rows],
+                # fallback: an int `derived` is a byte figure on legacy
+                # rows — but only when non-negative (benchmarks use -1 as
+                # a "budget exhausted" sentinel, which must not enter the
+                # strict bytes gate)
+                "arena_bytes": meta.get(
+                    "arena_bytes",
+                    derived if isinstance(derived, int)
+                    and not isinstance(derived, bool)
+                    and derived >= 0 else None),
+                "dtypes": meta.get("dtypes"),
+            } for name, us, derived, meta in rows],
             "failed": failed,
             "smoke": args.smoke,
+            "units": {"us_per_call": "microseconds",
+                      "arena_bytes": "bytes"},
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -1,16 +1,19 @@
 """MCU deployment walk-through — the paper's headline experiment.
 
 SwiftNet-Cell-like CNN on a simulated NUCLEO-F767ZI (512 KB SRAM, ≈200 KB
-framework overhead): with the default operator order the model does NOT fit;
-after reordering it does.  Numerics are verified bit-identical across
-schedules, and the defragmenting dynamic allocator's overhead is reported.
+framework overhead).  The deployment is int8, as on the real device: the
+float model is post-training-quantized, then with the default operator
+order it does NOT fit the remaining budget; after reordering it does.
+Numerics are verified bit-identical across schedules, and the
+defragmenting dynamic allocator's overhead is reported.  For contrast, the
+f32 build's 4x working sets are printed too.
 
     PYTHONPATH=src python examples/mcu_deploy.py
 """
 import numpy as np
 
 from repro.core import ArenaPlanner, schedule, static_plan_size
-from repro.graphs import swiftnet_cell_graph
+from repro.graphs import quantize_graph, random_input, swiftnet_cell_graph
 from repro.graphs.cnn_ops import model_weight_bytes
 from repro.mcu import MicroInterpreter
 
@@ -19,27 +22,32 @@ OVERHEAD = 200 * 1024
 
 
 def main():
-    g = swiftnet_cell_graph()
+    f = swiftnet_cell_graph()
+    qm = quantize_graph(f, random_input(f))
+    g = qm.graph
     print(f"model: {len(g.operators)} operators, "
-          f"{model_weight_bytes(g) / 1024:.0f} KB parameters (NOR-flash)")
+          f"{model_weight_bytes(g) / 1024:.0f} KB int8 parameters "
+          f"(NOR-flash; f32 would be "
+          f"{model_weight_bytes(f) / 1024:.0f} KB)")
 
     default = g.default_schedule()
     best = schedule(g)
     d_peak = g.peak_usage(default)
-    print(f"\npeak SRAM, default order : {d_peak / 1024:7.1f} KB")
+    print(f"\npeak SRAM, default order : {d_peak / 1024:7.1f} KB (int8)")
     print(f"peak SRAM, optimal order : {best.peak / 1024:7.1f} KB "
           f"({best.method})")
     print(f"saving                   : {(d_peak - best.peak) / 1024:7.1f} KB")
+    print(f"f32 default order        : "
+          f"{f.peak_usage(f.default_schedule()) / 1024:7.1f} KB (4x)")
     budget = SRAM - OVERHEAD
     print(f"\nSRAM budget (512 KB - 200 KB overhead): {budget / 1024:.0f} KB")
     print(f"  default order fits: {d_peak <= budget}")
     print(f"  optimal order fits: {best.peak <= budget}")
 
-    x = {"input": np.random.default_rng(0)
-         .standard_normal(g.tensors["input"].shape).astype(np.float32)}
+    x = qm.quantize_inputs(random_input(f))
     interp = MicroInterpreter(g, capacity=budget)
     rep = interp.run(x, schedule=best.schedule)
-    print(f"\nmicro-interpreter run (optimal order):")
+    print("\nmicro-interpreter run (optimal order):")
     print(f"  peak arena     : {rep.peak_sram / 1024:.1f} KB")
     print(f"  defrag traffic : {rep.bytes_moved / 1024:.0f} KB over "
           f"{rep.defrag_passes} passes")
@@ -51,7 +59,7 @@ def main():
     print(f"  outputs identical across schedules: {same}")
 
     plan = ArenaPlanner.plan(g, best.schedule)
-    ArenaPlanner.validate(plan)
+    ArenaPlanner.validate(plan, g)
     print(f"\noffline arena plan (paper §6): {plan.arena_size / 1024:.1f} KB"
           f"  (static all-resident: {static_plan_size(g) / 1024:.0f} KB)")
 

@@ -44,7 +44,7 @@ def main():
     print(f"  static (all 10)   : {engine.stats['static_bytes'] / 1e6:.2f} MB")
 
     rep = engine.analyse_decode_schedule(batch_size=4)
-    print(f"\ndecode-step jaxpr reordering (paper Algorithm 1 on XLA):")
+    print("\ndecode-step jaxpr reordering (paper Algorithm 1 on XLA):")
     print(f"  {rep}")
 
 

@@ -29,7 +29,7 @@ def main():
     cfg = get_config(args.arch).replace(num_layers=4, d_model=256)
     model = Model(cfg)
     state = train_state_init(cfg, jax.random.PRNGKey(0))
-    n_params = sum(l.size for l in jax.tree_util.tree_leaves(state.params))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(state.params))
     print(f"arch={cfg.name}  params={n_params / 1e6:.1f}M")
 
     ds = SyntheticLMDataset(cfg, args.batch, args.seq, seed=0)

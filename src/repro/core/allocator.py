@@ -13,6 +13,15 @@ advance, optimal tensor buffer placement in memory may be precomputed"): an
 offline offset assignment over tensor lifetimes, greedy best-fit by decreasing
 size — the strategy used by TFLite's arena planner.  Invariant (property
 tested): tensors with overlapping lifetimes occupy disjoint address ranges.
+
+Both allocators are **byte-granular**: sizes are bytes
+(``elements * itemsize``, see ``graph.DTYPE_ITEMSIZE``) and offsets are byte
+offsets.  Alignment policy: every offset is rounded up to ``alignment``
+bytes; ``ArenaPlanner.plan(alignment=None)`` picks the graph's widest
+element type (4 for any graph containing f32 tensors, 1 for pure int8), so
+a bitcast view of the arena at any placement is always naturally aligned —
+the precondition the compiled executor (and a real MCU pointer cast)
+relies on.
 """
 from __future__ import annotations
 
@@ -39,13 +48,25 @@ class AllocatorStats:
 
 
 class DynamicAllocator:
-    """First-fit allocation + compact-to-front defragmentation (paper §4)."""
+    """First-fit allocation + compact-to-front defragmentation (paper §4).
 
-    def __init__(self, capacity: Optional[int] = None) -> None:
+    ``alignment`` > 1 rounds every block offset up to that many bytes
+    (mixed-dtype arenas need at least the widest itemsize so live buffers
+    stay dereferenceable after compaction)."""
+
+    def __init__(self, capacity: Optional[int] = None,
+                 alignment: int = 1) -> None:
+        if alignment < 1:
+            raise ValueError(f"alignment must be >= 1, got {alignment}")
         self.capacity = capacity
+        self.alignment = alignment
         self.blocks: List[Block] = []          # sorted by offset
         self.addresses: Dict[str, int] = {}    # tensor -> offset
         self.stats = AllocatorStats()
+
+    def _align(self, x: int) -> int:
+        a = self.alignment
+        return (x + a - 1) // a * a
 
     # ------------------------------------------------------------------ api
     def alloc(self, tensor: str, size: int) -> int:
@@ -87,7 +108,7 @@ class DynamicAllocator:
 
     def defragment(self) -> int:
         """Compact all live blocks to the start of the arena, preserving
-        order.  Returns bytes moved (cost proxy)."""
+        order (offsets stay aligned).  Returns bytes moved (cost proxy)."""
         moved = 0
         cursor = 0
         for b in self.blocks:
@@ -95,7 +116,7 @@ class DynamicAllocator:
                 moved += b.size
                 b.offset = cursor
                 self.addresses[b.tensor] = cursor
-            cursor += b.size
+            cursor = self._align(cursor + b.size)
         self.stats.bytes_moved += moved
         self.stats.defrag_passes += 1
         return moved
@@ -112,7 +133,7 @@ class DynamicAllocator:
         for b in self.blocks:
             if b.offset - cursor >= size:
                 return cursor
-            cursor = max(cursor, b.offset + b.size)
+            cursor = self._align(max(cursor, b.offset + b.size))
         return cursor
 
     def _insert(self, blk: Block) -> None:
@@ -211,11 +232,19 @@ class ArenaPlanner:
     Tensors chained through ``inplace`` operators are planned as one
     shared buffer (same offset, union of lifetimes) — without this, a
     partial-execution concat chain would be charged K copies of the
-    output tensor and the sliced schedule's savings would vanish."""
+    output tensor and the sliced schedule's savings would vanish.
+
+    ``alignment=None`` (default) aligns offsets to the graph's widest
+    element type, so every placement can be bitcast-viewed at its natural
+    alignment (pure-int8 graphs plan at byte granularity, any graph with
+    f32 tensors at 4 bytes)."""
 
     @staticmethod
     def plan(graph: Graph, schedule: Sequence[Operator],
-             include_constants: bool = True, alignment: int = 1) -> ArenaPlan:
+             include_constants: bool = True,
+             alignment: Optional[int] = None) -> ArenaPlan:
+        if alignment is None:
+            alignment = graph.max_itemsize()
         lifetimes = tensor_lifetimes(graph, schedule, include_constants)
         alias = inplace_alias_groups(graph, schedule)
         # fold alias groups into one pseudo-tensor spanning all members
@@ -262,9 +291,19 @@ class ArenaPlanner:
         return ArenaPlan(expanded, arena)
 
     @staticmethod
-    def validate(plan: ArenaPlan) -> None:
+    def validate(plan: ArenaPlan, graph: Optional[Graph] = None) -> None:
         """Overlapping lifetimes ⇒ disjoint address ranges (tensors sharing
-        a buffer through an inplace chain are exempt by construction)."""
+        a buffer through an inplace chain are exempt by construction).
+        With ``graph``, additionally checks every placement is aligned to
+        its tensor's itemsize — the bitcast-view precondition."""
+        if graph is not None:
+            for p in plan.placements:
+                isz = graph.itemsize(p.tensor)
+                if p.offset % isz:
+                    raise AssertionError(
+                        f"misaligned placement: {p.tensor} "
+                        f"({graph.tensors[p.tensor].dtype}, itemsize {isz}) "
+                        f"at byte offset {p.offset}")
         ps = [p for p in plan.placements if p.size > 0]
         for i, a in enumerate(ps):
             for b in ps[i + 1:]:

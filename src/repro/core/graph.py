@@ -10,17 +10,53 @@ paper's Algorithm 1 (they "just contribute to memory usage").
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+# Byte width per supported element type.  The planner, allocators and the
+# compiled executor are byte-granular: every ``Tensor.size`` is
+# ``elements * itemsize(dtype)`` bytes, and arena offsets are byte offsets
+# aligned to at least the tensor's itemsize (an MCU cannot dereference a
+# misaligned ``float*``).  ``int8`` is the historical default so
+# scheduling-only graphs with abstract byte sizes stay coherent
+# (1 byte == 1 element).
+DTYPE_ITEMSIZE: Dict[str, int] = {
+    # no "bool": XLA cannot bitcast bytes to i1, so the compiled arena
+    # executor could never honour it — masks model as uint8
+    "int8": 1, "uint8": 1,
+    "int16": 2, "float16": 2, "bfloat16": 2,
+    "int32": 4, "float32": 4,
+}
+
+
+def dtype_itemsize(dtype: str) -> int:
+    try:
+        return DTYPE_ITEMSIZE[dtype]
+    except KeyError:
+        raise ValueError(f"unsupported tensor dtype {dtype!r}; "
+                         f"known: {sorted(DTYPE_ITEMSIZE)}") from None
 
 
 @dataclasses.dataclass(frozen=True)
 class Tensor:
-    """A tensor in the graph. ``size`` is in bytes (or any additive unit)."""
+    """A tensor in the graph. ``size`` is in **bytes**
+    (= ``elements * itemsize(dtype)``)."""
 
     name: str
     size: int
     shape: Tuple[int, ...] = ()
     dtype: str = "int8"
+
+    @property
+    def itemsize(self) -> int:
+        return dtype_itemsize(self.dtype)
+
+    @property
+    def elements(self) -> int:
+        if self.size % self.itemsize:
+            raise ValueError(
+                f"tensor {self.name!r}: {self.size} bytes is not a multiple "
+                f"of {self.dtype} itemsize {self.itemsize}")
+        return self.size // self.itemsize
 
     def __repr__(self) -> str:  # keep trace output compact
         return f"T({self.name}:{self.size})"
@@ -69,6 +105,7 @@ class Graph:
         if name in self.tensors:
             raise ValueError(f"duplicate tensor {name!r}")
         t = Tensor(name, int(size), tuple(shape), dtype)
+        t.elements     # validates size % itemsize == 0 and a known dtype
         self.tensors[name] = t
         self._consumers.setdefault(name, [])
         return t
@@ -109,6 +146,17 @@ class Graph:
 
     def size(self, tensor: str) -> int:
         return self.tensors[tensor].size
+
+    def itemsize(self, tensor: str) -> int:
+        return self.tensors[tensor].itemsize
+
+    def elements(self, tensor: str) -> int:
+        return self.tensors[tensor].elements
+
+    def max_itemsize(self) -> int:
+        """Widest element type in the graph — the natural arena alignment
+        for mixed-dtype plans (see ``ArenaPlanner``)."""
+        return max((t.itemsize for t in self.tensors.values()), default=1)
 
     def op_by_name(self, name: str) -> Operator:
         for op in self.operators:

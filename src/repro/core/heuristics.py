@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
 
 from .graph import Graph, Operator, linear_chains
 from .scheduler import ScheduleResult, minimise_peak_memory
@@ -92,7 +92,6 @@ def greedy_schedule(graph: Graph) -> ScheduleResult:
 def beam_schedule(graph: Graph, width: int = 64) -> ScheduleResult:
     ops = graph.operators
     n = len(ops)
-    op_index = {id(op): k for k, op in enumerate(ops)}
     consumers_left_init: Dict[str, int] = {}
     for op in ops:
         for i in set(op.inputs):

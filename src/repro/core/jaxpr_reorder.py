@@ -31,7 +31,7 @@ import numpy as np
 from jax.extend import core as jcore           # public Jaxpr/ClosedJaxpr API
 from jax._src.core import DropVar, eval_jaxpr  # no public equivalents yet
 
-from .graph import Graph, Operator
+from .graph import Graph
 from .heuristics import schedule as _schedule
 from .scheduler import ScheduleResult
 

@@ -2,7 +2,7 @@
 and an ASCII usage plot, as produced by the paper's tflite-tools."""
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import Sequence
 
 from .graph import Graph, Operator
 

@@ -9,7 +9,7 @@ loader.  Also provides the modality-stub inputs (patch/frame embeddings).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -68,9 +68,15 @@ def _elementwise_slice_fn(op: Operator, pad_top: int, pad_bottom: int):
     return op.fn
 
 
+_QCONV_ATTRS = ("weight_q", "stride", "mult", "zp_in", "zp_out")
+
+
 def pex_spec(kind: str, out_shape: Tuple[int, int, int], cin: int,
              k: int = 1, stride: int = 1) -> Optional[SliceSpec]:
-    """The partial-execution classification of a CNN operator kind."""
+    """The partial-execution classification of a CNN operator kind.  The
+    int8 kinds (``q*``) slice exactly like their float counterparts: the
+    row map only depends on kernel/stride, and requantization is per-tensor
+    so every slice applies the same (scale, zero-point)."""
     oh, ow, cout = out_shape
     if kind == "conv":
         return SliceSpec(k, stride, (0,),
@@ -87,11 +93,33 @@ def pex_spec(kind: str, out_shape: Tuple[int, int, int], cin: int,
     if kind == "add":
         return SliceSpec(1, 1, None, _elementwise_slice_fn,
                          macs_per_row=ow * cout)
+    if kind == "qconv":
+        return SliceSpec(k, stride, (0,),
+                         _windowed_slice_fn("qconv2d", _QCONV_ATTRS),
+                         macs_per_row=ow * cout * k * k * cin)
+    if kind == "qdwconv":
+        return SliceSpec(k, stride, (0,),
+                         _windowed_slice_fn("qdwconv2d", _QCONV_ATTRS),
+                         macs_per_row=ow * cout * k * k)
+    if kind == "qmaxpool":
+        return SliceSpec(k, stride, (0,),
+                         _windowed_slice_fn("qmaxpool2d", ("k", "stride")),
+                         macs_per_row=ow * cout * k * k)
+    if kind == "qadd":
+        return SliceSpec(1, 1, None, _elementwise_slice_fn,
+                         macs_per_row=ow * cout)
     return None    # concat / avgpool / fc: not spatially sliceable
 
 
 # Each builder registers a tensor + operator on the graph and returns the
-# output tensor name.  Sizes are int8 bytes = H*W*C (paper models are int8).
+# output tensor name.  The builder models the *float* network, so tensors
+# are float32 and sizes are honest bytes (4 * H * W * C); the post-training
+# int8 path (``graphs/quantize.py``) rewrites the graph with int8 tensors
+# at 1 byte per element — the byte-for-byte composition of quantization
+# with reordering/Pex the paper calls "orthogonal".
+F32 = 4   # bytes per float32 element
+
+
 class CNNBuilder:
     def __init__(self, graph: Graph):
         self.g = graph
@@ -103,7 +131,7 @@ class CNNBuilder:
         return f"{prefix}{self._n}"
 
     def input(self, name: str, h: int, w: int, c: int) -> str:
-        self.g.add_tensor(name, h * w * c, (h, w, c))
+        self.g.add_tensor(name, F32 * h * w * c, (h, w, c), dtype="float32")
         self.shapes[name] = (h, w, c)
         return name
 
@@ -112,7 +140,7 @@ class CNNBuilder:
         name = self._next(kind)
         out = f"{name}_out"
         h, w, c = out_shape
-        self.g.add_tensor(out, h * w * c, out_shape)
+        self.g.add_tensor(out, F32 * h * w * c, out_shape, dtype="float32")
         self.shapes[out] = out_shape
         spec = pex_spec(kind, out_shape, cin, attrs.get("k", 1),
                         attrs.get("stride", 1))
@@ -131,7 +159,7 @@ class CNNBuilder:
             return conv2d(a, w, stride)
 
         return self._emit("conv", [x], (oh, ow, cout), fn, cin=cin,
-                          weight_bytes=wgt.size, weight=wgt, k=k,
+                          weight_bytes=wgt.nbytes, weight=wgt, k=k,
                           stride=stride)
 
     def dwconv(self, x: str, k: int = 3, stride: int = 1) -> str:
@@ -144,7 +172,7 @@ class CNNBuilder:
             return dwconv2d(a, w, stride)
 
         return self._emit("dwconv", [x], (oh, ow, cin), fn, cin=cin,
-                          weight_bytes=wgt.size, weight=wgt, k=k,
+                          weight_bytes=wgt.nbytes, weight=wgt, k=k,
                           stride=stride)
 
     def maxpool(self, x: str, k: int = 2, stride: int = 2) -> str:
@@ -193,7 +221,8 @@ class CNNBuilder:
             # bit-identity contract with this eager reference.
             return jnp.sum(jnp.reshape(a, (-1, 1)) * w, axis=0)[None, None, :]
 
-        return self._emit("fc", [x], (1, 1, nout), fn, weight_bytes=wgt.size)
+        return self._emit("fc", [x], (1, 1, nout), fn, weight=wgt,
+                          weight_bytes=wgt.nbytes)
 
 
 def conv2d(x, w, stride: int, hpad: Optional[Tuple[int, int]] = None):
@@ -240,6 +269,110 @@ def model_weight_bytes(graph: Graph) -> int:
     return sum(op.attrs.get("weight_bytes", 0) for op in graph.operators)
 
 
+# ------------------------------------------------------ int8 (quantized) ops
+# Per-tensor affine quantization (TFLite-Micro convention): real = scale *
+# (q - zero_point), q int8 in [-128, 127].  Convolutions subtract the input
+# zero-point, accumulate in int32 (exact), then requantize through a single
+# float32 multiplier ``mult = s_in * s_w / s_out`` with round-half-even —
+# every step is deterministic, so the compiled executor's int8 outputs are
+# bit-identical to the interpreter's, slice-by-slice (the same contract the
+# f32 path keeps).  SAME padding in the quantized domain pads with the input
+# zero-point, which the (x - zp) -> pad-with-0 formulation gives for free,
+# so Pex slices of int8 ops stay bit-identical too.
+INT8_MIN, INT8_MAX = -128, 127
+
+
+def requantize(acc, mult: float, zp_out: int, lo: int = INT8_MIN):
+    """int32 accumulator -> int8 at the output (scale, zero_point).  ``lo``
+    is the lower clamp: ``zp_out`` for fused relu (real 0), -128 otherwise."""
+    y = jnp.round(acc.astype(jnp.float32) * jnp.float32(mult)) + zp_out
+    return jnp.clip(y, lo, INT8_MAX).astype(jnp.int8)
+
+
+def quantize_array(x, scale: float, zp: int):
+    """f32 -> int8 at (scale, zp).  Also the semantics of ``quant`` ops in
+    mixed-precision graphs."""
+    q = jnp.round(x.astype(jnp.float32) / jnp.float32(scale)) + zp
+    return jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize_array(q, scale: float, zp: int):
+    """int8 -> f32; the semantics of ``dequant`` ops."""
+    return (q.astype(jnp.float32) - zp) * jnp.float32(scale)
+
+
+def qconv2d(x, w, stride: int, mult: float, zp_in: int, zp_out: int,
+            hpad: Optional[Tuple[int, int]] = None):
+    """x: (H,W,Cin) int8; w: (k,k,Cin,Cout) int8; SAME padding; fused relu
+    (lower clamp at ``zp_out``).  ``hpad`` as in ``conv2d``."""
+    k = w.shape[0]
+    hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
+    wp = _pads(x.shape[1], w.shape[1], stride)
+    xi = x.astype(jnp.int32) - zp_in       # pad rows become 0 == zp_in
+    acc = lax.conv_general_dilated(
+        xi[None], jnp.asarray(w, jnp.int32), window_strides=(stride, stride),
+        padding=[hp, wp], dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+    return requantize(acc, mult, zp_out, lo=zp_out)
+
+
+def qdwconv2d(x, w, stride: int, mult: float, zp_in: int, zp_out: int,
+              hpad: Optional[Tuple[int, int]] = None):
+    cin = x.shape[-1]
+    k = w.shape[0]
+    hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
+    wp = _pads(x.shape[1], w.shape[1], stride)
+    xi = x.astype(jnp.int32) - zp_in
+    wi = jnp.reshape(jnp.transpose(jnp.asarray(w, jnp.int32), (0, 1, 3, 2)),
+                     (w.shape[0], w.shape[1], 1, cin))
+    acc = lax.conv_general_dilated(
+        xi[None], wi, window_strides=(stride, stride), padding=[hp, wp],
+        feature_group_count=cin,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+    return requantize(acc, mult, zp_out, lo=zp_out)
+
+
+def qmaxpool2d(x, k: int, stride: int,
+               hpad: Optional[Tuple[int, int]] = None):
+    """Max-pooling is order-preserving, so scale/zero-point pass through;
+    padding takes the int8 identity -128 (mirrors the f32 -inf)."""
+    hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
+    wp = _pads(x.shape[1], k, stride)
+    return lax.reduce_window(x, np.int8(INT8_MIN), lax.max, (k, k, 1),
+                             (stride, stride, 1), (hp, wp, (0, 0)))
+
+
+def qadd(a, b, mult_a: float, mult_b: float, zp_a: int, zp_b: int,
+         zp_out: int):
+    ya = (a.astype(jnp.float32) - zp_a) * jnp.float32(mult_a)
+    yb = (b.astype(jnp.float32) - zp_b) * jnp.float32(mult_b)
+    y = jnp.round(ya + yb) + zp_out
+    return jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def qavgpool(x):
+    """Global average in the quantized domain (scale/zp pass through: the
+    mean of q-values represents the mean of reals at the same params)."""
+    m = jnp.mean(x.astype(jnp.float32), axis=(0, 1), keepdims=True)
+    return jnp.clip(jnp.round(m), INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def qfc(x, w, mult: float, zp_in: int, zp_out: int):
+    """int8 fully-connected; mul+reduce in int32 for the same
+    context-insensitivity reason as the f32 ``fc`` (and exactness)."""
+    xi = jnp.reshape(x.astype(jnp.int32) - zp_in, (-1, 1))
+    acc = jnp.sum(xi * jnp.asarray(w, jnp.int32), axis=0)[None, None, :]
+    return requantize(acc, mult, zp_out)
+
+
+def qconcat(*xs, mults: Sequence[float], zps: Sequence[int], zp_out: int):
+    """Channel concat with per-input requantization to the output params."""
+    parts = []
+    for x, m, zp in zip(xs, mults, zps):
+        y = jnp.round((x.astype(jnp.float32) - zp) * jnp.float32(m)) + zp_out
+        parts.append(jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int8))
+    return jnp.concatenate(parts, axis=-1)
+
+
 # ------------------------------------------------- compiled-executor lowering
 # Rules for the compiled arena executor (mcu/compile.py) live next to the
 # semantics they mirror.  Each rule rebuilds the op's computation from attrs
@@ -277,3 +410,57 @@ def _lower_maxpool(ctx, op: Operator, x):
 @register_lowering("add")
 def _lower_add(ctx, op: Operator, x, y):
     return x + y
+
+
+@register_lowering("qconv")
+def _lower_qconv(ctx, op: Operator, x):
+    a = op.attrs
+    return qconv2d(x, a["weight_q"], a["stride"], a["mult"], a["zp_in"],
+                   a["zp_out"], hpad=a.get("pex_pads"))
+
+
+@register_lowering("qdwconv")
+def _lower_qdwconv(ctx, op: Operator, x):
+    a = op.attrs
+    return qdwconv2d(x, a["weight_q"], a["stride"], a["mult"], a["zp_in"],
+                     a["zp_out"], hpad=a.get("pex_pads"))
+
+
+@register_lowering("qmaxpool")
+def _lower_qmaxpool(ctx, op: Operator, x):
+    return qmaxpool2d(x, op.attrs["k"], op.attrs["stride"],
+                      hpad=op.attrs.get("pex_pads"))
+
+
+@register_lowering("qadd")
+def _lower_qadd(ctx, op: Operator, x, y):
+    a = op.attrs
+    return qadd(x, y, a["mult_a"], a["mult_b"], a["zp_a"], a["zp_b"],
+                a["zp_out"])
+
+
+@register_lowering("qavgpool")
+def _lower_qavgpool(ctx, op: Operator, x):
+    return qavgpool(x)
+
+
+@register_lowering("qfc")
+def _lower_qfc(ctx, op: Operator, x):
+    a = op.attrs
+    return qfc(x, a["weight_q"], a["mult"], a["zp_in"], a["zp_out"])
+
+
+@register_lowering("qconcat")
+def _lower_qconcat(ctx, op: Operator, *xs):
+    a = op.attrs
+    return qconcat(*xs, mults=a["mults"], zps=a["zps"], zp_out=a["zp_out"])
+
+
+@register_lowering("quant")
+def _lower_quant(ctx, op: Operator, x):
+    return quantize_array(x, op.attrs["scale"], op.attrs["zp"])
+
+
+@register_lowering("dequant")
+def _lower_dequant(ctx, op: Operator, x):
+    return dequantize_array(x, op.attrs["scale"], op.attrs["zp"])

@@ -22,10 +22,7 @@ DEFAULT_PEAK = 5216
 OPTIMAL_PEAK = 4960
 
 
-def figure1_graph() -> Graph:
-    g = Graph()
-    for name, size in SIZES.items():
-        g.add_tensor(name, size)
+def _wire_ops(g: Graph) -> None:
     g.add_operator("op1", ["t0"], "t1", kind="conv2d")
     g.add_operator("op2", ["t1"], "t2", kind="conv2d")
     g.add_operator("op3", ["t2"], "t3", kind="conv2d")
@@ -34,22 +31,57 @@ def figure1_graph() -> Graph:
     g.add_operator("op6", ["t4"], "t6", kind="conv2d")
     g.add_operator("op7", ["t5", "t6"], "t7", kind="concat")
     g.set_outputs(["t7"])
+
+
+def figure1_graph() -> Graph:
+    g = Graph()
+    for name, size in SIZES.items():
+        g.add_tensor(name, size)
+    _wire_ops(g)
     return g
 
 
 def figure1_executable_graph() -> Graph:
     """figure1 with deterministic f32 semantics attached, so the executors
     (micro-interpreter and compiled) can run it — the paper's figure is a
-    scheduling exemplar and ships without numerics.  Shared by the
-    differential tests and the executor benchmark so both exercise the same
-    program."""
+    scheduling exemplar and ships without numerics.  The byte sizes are the
+    paper's, so as a float32 graph each tensor holds ``size // 4`` elements
+    (the memory model is byte-granular; dtype honesty is what the executors
+    verify).  Shared by the differential tests and the executor benchmark
+    so both exercise the same program."""
     import jax.numpy as jnp
 
-    g = figure1_graph()
+    g = Graph()
+    for name, size in SIZES.items():
+        g.add_tensor(name, size, shape=(size // 4,), dtype="float32")
+    _wire_ops(g)
     for op in g.operators:
         if op.kind == "concat":
             op.fn = lambda *xs: jnp.concatenate([jnp.ravel(x) for x in xs])
         else:
-            n = g.size(op.output)
+            n = g.elements(op.output)
             op.fn = (lambda n: lambda x: jnp.resize(x, (n,)) * 0.5 + 0.25)(n)
+    return g
+
+
+def figure1_int8_graph() -> Graph:
+    """figure1 as a *directly-constructed* int8 graph (1 byte per element,
+    deterministic integer semantics) — the non-calibrated member of the
+    int8 differential grid, exercising the byte arena with itemsize 1."""
+    import jax.numpy as jnp
+
+    g = Graph()
+    for name, size in SIZES.items():
+        g.add_tensor(name, size, shape=(size,), dtype="int8")
+    _wire_ops(g)
+    for op in g.operators:
+        if op.kind == "concat":
+            op.fn = lambda *xs: jnp.concatenate([jnp.ravel(x) for x in xs])
+        else:
+            n = g.elements(op.output)
+
+            def fn(x, n=n):
+                y = jnp.resize(x, (n,)).astype(jnp.int32) * 3 // 2 + 1
+                return jnp.clip(y, -128, 127).astype(jnp.int8)
+            op.fn = fn
     return g

@@ -31,12 +31,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.analysis.roofline import (TPU_V5E, collective_bytes_from_hlo,
+from repro.analysis.roofline import (collective_bytes_from_hlo,
                                      model_flops, roofline_report)
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import (SHAPES, batch_specs, config_for_shape,
-                                 decode_token_specs, shape_applicable)
+                                 shape_applicable)
 from repro.models.model import (Model, cache_specs, init_cache, init_params,
                                 param_specs)
 from repro.training.optimizer import adamw_init
@@ -101,7 +101,7 @@ def lower_combo(arch: str, shape_name: str, mesh, *, donate: bool = True,
                 step=NamedSharding(mesh, P()),
                 mu=opt_sh["mu"], nu=opt_sh["nu"]))
         state_in = jax.tree_util.tree_map(
-            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
             state_shape, state_sh)
         batch_in = {
             k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=s)
@@ -118,7 +118,7 @@ def lower_combo(arch: str, shape_name: str, mesh, *, donate: bool = True,
                                             sharding=batch_sh[k])
                     for k, v in specs.items()}
         params_in = jax.tree_util.tree_map(
-            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
             params_shape, params_sh)
         fn = jax.jit(lambda p, b: model.prefill(p, b,
                                                 cache_len=shape.seq_len))
@@ -131,10 +131,10 @@ def lower_combo(arch: str, shape_name: str, mesh, *, donate: bool = True,
             partial(init_cache, cfg, shape.global_batch, shape.seq_len))
         cache_sh = _named(mesh, csp, cache_shape)
         cache_in = jax.tree_util.tree_map(
-            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
             cache_shape, cache_sh)
         params_in = jax.tree_util.tree_map(
-            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
             params_shape, params_sh)
         dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
         dp_size = int(np.prod([mesh.shape[a] for a in dp]))

@@ -10,8 +10,6 @@ devices — must be the FIRST thing the process does, so it is a flag here,
 not an afterthought).
 """
 import argparse
-import os
-import sys
 
 
 def main(argv=None):
@@ -44,13 +42,14 @@ def main(argv=None):
     state = train_state_init(cfg, jax.random.PRNGKey(0))
     if mesh is not None:
         specs = param_specs(cfg, mesh)
-        shard = lambda t, s: jax.device_put(t, NamedSharding(mesh, s))
+        def shard(t, s):
+            return jax.device_put(t, NamedSharding(mesh, s))
         state = state._replace(
             params=jax.tree_util.tree_map(shard, state.params, specs),
             opt=state.opt._replace(
                 mu=jax.tree_util.tree_map(shard, state.opt.mu, specs),
                 nu=jax.tree_util.tree_map(shard, state.opt.nu, specs)))
-    n = sum(l.size for l in jax.tree_util.tree_leaves(state.params))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(state.params))
     print(f"arch={cfg.name} params={n/1e6:.1f}M mesh="
           f"{dict(mesh.shape) if mesh else None}")
 

@@ -9,17 +9,20 @@ dispatch, which validates the memory model but is orders of magnitude slower
 than the hardware.  ``compile_schedule`` closes the gap the way Pex and
 MCUNet pair their planners with a compiled runtime:
 
-* the whole arena is **one buffer** (``plan.arena_size`` elements; the
-  paper's int8 byte accounting maps one modelled byte to one arena element,
-  executed in the simulator's f32 numerics).  The jitted program takes the
-  arena and returns the arena, and is jitted with ``donate_argnums=0`` so
-  XLA updates it in place — the jit-level equivalent of a Pallas kernel's
-  ``input_output_aliases``;
-* each operator becomes a static slice-read of its inputs at their
-  ``Placement`` offsets, a lowering rule (see the registry below), and a
-  ``dynamic_update_slice`` of the output at its offset.  The plan's
-  disjointness invariant (overlapping lifetimes ⇒ disjoint ranges) is what
-  makes this sound;
+* the whole arena is **one uint8 buffer** of ``plan.arena_size`` bytes —
+  exactly the byte-addressed SRAM arena of TFLite-Micro.  The jitted
+  program takes the arena and returns the arena, and is jitted with
+  ``donate_argnums=0`` so XLA updates it in place — the jit-level
+  equivalent of a Pallas kernel's ``input_output_aliases``;
+* each operator becomes a static byte-slice read of its inputs at their
+  ``Placement`` offsets **bitcast to the tensor's dtype** (f32 tensors view
+  4 bytes per element, int8 tensors 1 — mixed f32/int8 graphs coexist in
+  the one arena), a lowering rule (see the registry below), and a bitcast
+  back to bytes + ``dynamic_update_slice`` at the output's offset.  The
+  plan's disjointness invariant (overlapping lifetimes ⇒ disjoint ranges)
+  plus its alignment policy (offsets aligned to the itemsize, so every
+  bitcast view is naturally aligned — enforced here at compile time) are
+  what make this sound;
 * inplace chains (partial execution's incremental ``pex_concat``) alias to
   one offset in the plan, so the read-modify-write at that offset **is** the
   shared accumulator buffer — no copies materialise after XLA's donation;
@@ -70,6 +73,36 @@ except Exception:            # private path moved: only fuse=True vmaps
     pass
 
 
+# ------------------------------------------------------------- dtype bitcasts
+# The arena is bytes; tensors are typed views of byte ranges.  These two
+# helpers are the only place the executor crosses that boundary, and both
+# are exact bit-level reinterpretations (no rounding, no canonicalisation),
+# so they cannot perturb the bit-identity contract.
+_JNP_DTYPES = {
+    "int8": jnp.int8, "uint8": jnp.uint8,
+    "int16": jnp.int16, "float16": jnp.float16, "bfloat16": jnp.bfloat16,
+    "int32": jnp.int32, "float32": jnp.float32,
+}
+
+
+def _view_bytes(raw, dtype: str, shape: Tuple[int, ...]):
+    """uint8 [nbytes] -> ``dtype`` array of ``shape``."""
+    dt = jnp.dtype(_JNP_DTYPES[dtype])
+    if dt.itemsize == 1:
+        v = raw if dt == jnp.uint8 else lax.bitcast_convert_type(raw, dt)
+    else:
+        v = lax.bitcast_convert_type(raw.reshape(-1, dt.itemsize), dt)
+    return v.reshape(shape)
+
+
+def _as_bytes(val):
+    """Any array -> flat uint8 [nbytes]."""
+    flat = jnp.ravel(val)
+    if flat.dtype == jnp.uint8:
+        return flat
+    return jnp.ravel(lax.bitcast_convert_type(flat, jnp.uint8))
+
+
 # ----------------------------------------------------------- lowering registry
 @dataclasses.dataclass
 class LoweringCtx:
@@ -81,7 +114,10 @@ class LoweringCtx:
 
     def shape(self, tensor: str) -> Tuple[int, ...]:
         t = self.graph.tensors[tensor]
-        return tuple(t.shape) if t.shape else (t.size,)
+        return tuple(t.shape) if t.shape else (t.elements,)
+
+    def dtype(self, tensor: str) -> str:
+        return self.graph.tensors[tensor].dtype
 
 
 _RULES: Dict[str, Callable[..., Any]] = {}
@@ -137,8 +173,8 @@ def _roll_key(ctx: LoweringCtx, op: Operator):
     live).  Two ops with equal keys run the same program on same-shaped data,
     so consecutive slices whose keys match position-for-position can share
     one fori_loop body.  ``None`` = not rollable."""
-    ins = tuple(ctx.shape(i) for i in op.inputs)
-    outs = ctx.shape(op.output)
+    ins = tuple((ctx.shape(i), ctx.dtype(i)) for i in op.inputs)
+    outs = (ctx.shape(op.output), ctx.dtype(op.output))
     a = op.attrs
     if op.kind == "pex_slice":
         if "pex_rows" not in a:
@@ -159,8 +195,9 @@ class _Slot:
     """Where one operand lives, across the iterations of a rolled loop."""
 
     offset: Any                 # int (static) or jnp int32 array [n] (param)
-    size: int
+    size: int                   # bytes
     shape: Tuple[int, ...]
+    dtype: str
 
     @property
     def static(self) -> bool:
@@ -210,16 +247,18 @@ def _build_loop(ctx: LoweringCtx, offsets: Dict[str, Tuple[int, int]],
         for j in range(len(rep.inputs)):
             names = [o.inputs[j] for o in ops]
             shape = ctx.shape(names[0])
+            dtype = ctx.dtype(names[0])
             sizes = {offsets[nm][1] for nm in names}
             if len(sizes) != 1:
                 return None
             size = sizes.pop()
             if all(nm == names[0] for nm in names):
-                in_slots.append(_Slot(offsets[names[0]][0], size, shape))
+                in_slots.append(_Slot(offsets[names[0]][0], size, shape,
+                                      dtype))
             else:
                 offs = jnp.asarray([offsets[nm][0] for nm in names],
                                    jnp.int32)
-                in_slots.append(_Slot(offs, size, shape))
+                in_slots.append(_Slot(offs, size, shape, dtype))
         onames = [o.output for o in ops]
         osizes = {offsets[nm][1] for nm in onames}
         if len(osizes) != 1:
@@ -227,7 +266,8 @@ def _build_loop(ctx: LoweringCtx, offsets: Dict[str, Tuple[int, int]],
         tpl = _Template(rep, in_slots,
                         _Slot(jnp.asarray([offsets[nm][0] for nm in onames],
                                           jnp.int32),
-                              osizes.pop(), ctx.shape(onames[0])))
+                              osizes.pop(), ctx.shape(onames[0]),
+                              ctx.dtype(onames[0])))
         if rep.kind == "pex_slice":
             tpl.lo = jnp.asarray([o.attrs["pex_rows"][0] for o in ops],
                                  jnp.int32)
@@ -282,27 +322,30 @@ class CompiledExecutor:
 
     ``raw_fn(arena) -> arena`` is the pure staged program (composable under
     ``jax.vmap`` for micro-batched serving); ``fn`` is its jitted,
-    donated-argument form.  ``arena_size`` equals ``plan.arena_size`` — the
-    program never reads or writes past it.
+    donated-argument form.  The arena is **uint8**: ``arena_size`` equals
+    ``plan.arena_size`` bytes, and the program never reads or writes past
+    it.  Tensors are typed bitcast views of their placements.
     """
 
     graph: Graph
     schedule: List[Operator]
     plan: ArenaPlan
-    arena_size: int
-    dtype: Any
+    arena_size: int              # bytes
+    dtype: Any                   # arena element type: always uint8
     raw_fn: Callable[[Any], Any]
     fn: Callable[[Any], Any]
     rolled_loops: int
     rolled_ops: int
     steps: int
-    offsets: Dict[str, Tuple[int, int]]    # tensor -> (offset, size)
+    offsets: Dict[str, Tuple[int, int]]    # tensor -> (byte offset, bytes)
 
     def _offsets(self, tensor: str) -> Tuple[int, int]:
         return self.offsets[tensor]
 
     def make_arena(self, inputs: Dict[str, Any]):
-        """Fresh arena with the graph inputs written at their offsets."""
+        """Fresh arena with the graph inputs written (as bytes) at their
+        offsets.  Input values must already be in the tensor's declared
+        dtype — an int8 graph takes quantized int8 inputs."""
         g = self.graph
         needed = {c for c in g.constants() if g.consumers(c)}
         missing = needed - set(inputs)
@@ -317,12 +360,19 @@ class CompiledExecutor:
             if not g.consumers(name):
                 continue       # unused input: not arena-resident in the plan
             off, size = self._offsets(name)
-            flat = jnp.ravel(jnp.asarray(value)).astype(self.dtype)
-            if flat.shape[0] != size:
+            t = g.tensors[name]
+            want = jnp.dtype(_JNP_DTYPES[t.dtype])
+            val = jnp.asarray(value)
+            if val.dtype != want:     # same contract as MicroInterpreter
+                raise ValueError(
+                    f"input {name!r} is {val.dtype}, graph declares "
+                    f"{t.dtype} (quantize inputs for int8 graphs)")
+            flat = jnp.ravel(val)
+            if flat.shape[0] != t.elements:
                 raise ValueError(
                     f"input {name!r}: got {flat.shape[0]} elements, "
-                    f"plan expects {size}")
-            arena = lax.dynamic_update_slice(arena, flat, (off,))
+                    f"plan expects {t.elements} ({size} bytes as {t.dtype})")
+            arena = lax.dynamic_update_slice(arena, _as_bytes(flat), (off,))
         return arena
 
     def outputs_from(self, arena, as_numpy: bool = True) -> Dict[str, Any]:
@@ -330,8 +380,8 @@ class CompiledExecutor:
         for o in self.graph.outputs:
             off, size = self._offsets(o)
             t = self.graph.tensors[o]
-            shape = tuple(t.shape) if t.shape else (size,)
-            val = arena[off:off + size].reshape(shape)
+            shape = tuple(t.shape) if t.shape else (t.elements,)
+            val = _view_bytes(arena[off:off + size], t.dtype, shape)
             out[o] = np.asarray(val) if as_numpy else val
         return out
 
@@ -344,7 +394,6 @@ class CompiledExecutor:
 def compile_schedule(graph: Graph,
                      schedule: Optional[Sequence[Operator]] = None,
                      plan: Optional[ArenaPlan] = None, *,
-                     dtype: Any = jnp.float32,
                      use_pallas: bool = False,
                      interpret: Optional[bool] = None,
                      roll_loops: bool = True,
@@ -352,7 +401,8 @@ def compile_schedule(graph: Graph,
                      donate: bool = True) -> CompiledExecutor:
     """Lower ``schedule`` (default: the graph's embedded order) against
     ``plan`` (default: ``ArenaPlanner.plan``) into a single jitted arena
-    program.  See the module docstring for the lowering model.
+    program over one uint8 byte buffer.  See the module docstring for the
+    lowering model.
 
     ``fuse=False`` (default) pins an ``optimization_barrier`` after every
     operator, reproducing the per-operator module boundaries of eager
@@ -370,19 +420,33 @@ def compile_schedule(graph: Graph,
         for t in list(op.inputs) + [op.output]:
             if t not in offsets:
                 raise KeyError(f"tensor {t!r} missing from the arena plan")
+            isz = graph.itemsize(t)
+            if offsets[t][0] % isz:
+                raise ValueError(
+                    f"tensor {t!r} ({graph.tensors[t].dtype}) placed at "
+                    f"misaligned byte offset {offsets[t][0]}; plan with "
+                    f"ArenaPlanner.plan(..., alignment=None) so offsets "
+                    f"are aligned to the widest itemsize")
     ctx = LoweringCtx(graph, use_pallas=use_pallas, interpret=interpret)
     items = _plan_items(ctx, offsets, sched, roll_loops)
 
     def read(arena, name: str):
         off, size = offsets[name]
-        return arena[off:off + size].reshape(ctx.shape(name))
+        return _view_bytes(arena[off:off + size], ctx.dtype(name),
+                           ctx.shape(name))
 
     def write(arena, name: str, val):
         off, size = offsets[name]
-        flat = jnp.ravel(val).astype(arena.dtype)
+        want = jnp.dtype(_JNP_DTYPES[ctx.dtype(name)])
+        if jnp.asarray(val).dtype != want:   # checked once, at trace time
+            raise ValueError(
+                f"{name}: lowered output is {jnp.asarray(val).dtype}, "
+                f"graph declares {ctx.dtype(name)} — quantized semantics "
+                f"must requantize before writing to the arena")
+        flat = _as_bytes(val)
         if flat.shape[0] != size:     # static shape: checked at trace time
             raise ValueError(
-                f"{name}: lowered output has {flat.shape[0]} elements, "
+                f"{name}: lowered output has {flat.shape[0]} bytes, "
                 f"plan expects {size}")
         return lax.dynamic_update_slice(arena, flat, (off,))
 
@@ -399,11 +463,11 @@ def compile_schedule(graph: Graph,
                 args = []
                 for slot in tpl.in_slots:
                     if slot.static:
-                        v = arena[slot.offset:slot.offset + slot.size]
+                        raw = arena[slot.offset:slot.offset + slot.size]
                     else:
-                        v = lax.dynamic_slice(arena, (slot.offset[i],),
-                                              (slot.size,))
-                    args.append(v.reshape(slot.shape))
+                        raw = lax.dynamic_slice(arena, (slot.offset[i],),
+                                                (slot.size,))
+                    args.append(_view_bytes(raw, slot.dtype, slot.shape))
                 op = tpl.op
                 if tpl.lo is not None:            # pex_slice, dynamic rows
                     x = args[0]
@@ -417,7 +481,13 @@ def compile_schedule(graph: Graph,
                     out = lax.dynamic_update_slice(acc, part, idx)
                 else:
                     out = lower_op(ctx, op, *args)
-                flat = jnp.ravel(out).astype(arena.dtype)
+                want = jnp.dtype(_JNP_DTYPES[tpl.out_slot.dtype])
+                if jnp.asarray(out).dtype != want:
+                    raise ValueError(
+                        f"{op.name}: lowered output is "
+                        f"{jnp.asarray(out).dtype}, graph declares "
+                        f"{tpl.out_slot.dtype}")
+                flat = _as_bytes(out)
                 if tpl.out_slot.static:
                     arena = lax.dynamic_update_slice(
                         arena, flat, (tpl.out_slot.offset,))
@@ -440,8 +510,8 @@ def compile_schedule(graph: Graph,
     loops = [it for it in items if isinstance(it, _RolledLoop)]
     return CompiledExecutor(
         graph=graph, schedule=sched, plan=plan,
-        arena_size=int(plan.arena_size), dtype=dtype,
+        arena_size=int(plan.arena_size), dtype=jnp.uint8,
         raw_fn=raw_fn, fn=fn,
         rolled_loops=len(loops),
-        rolled_ops=sum(l.n * len(l.templates) for l in loops),
+        rolled_ops=sum(lp.n * len(lp.templates) for lp in loops),
         steps=len(sched), offsets=offsets)

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, Optional, Sequence
 
 import numpy as np
 
@@ -64,7 +64,13 @@ class MicroInterpreter:
         sched = list(schedule) if schedule is not None else g.default_schedule()
         if not g.is_valid_schedule(sched):
             raise ValueError("invalid schedule")
-        alloc = DynamicAllocator(self.capacity) if plan is None else None
+        # the dynamic allocator compacts buffers, so mixed-dtype graphs
+        # need offsets aligned to the widest itemsize to stay
+        # dereferenceable (pure-int8/f32 graphs are unaffected: every
+        # size is already a multiple of the single itemsize)
+        alloc = (DynamicAllocator(self.capacity,
+                                  alignment=g.max_itemsize())
+                 if plan is None else None)
         offsets: Dict[str, tuple] = {}
         if plan is not None:
             offsets = {p.tensor: (p.offset, p.size) for p in plan.placements}
@@ -97,6 +103,13 @@ class MicroInterpreter:
         for name, value in inputs.items():
             if g.producer(name) is not None:
                 raise ValueError(f"{name!r} is not a graph input")
+            declared = g.tensors[name].dtype
+            if declared != "bfloat16":     # numpy has no bfloat16
+                got = np.asarray(value).dtype
+                if got != np.dtype(declared):
+                    raise ValueError(
+                        f"input {name!r} is {got}, graph declares "
+                        f"{declared} (quantize inputs for int8 graphs)")
             if alloc is not None:
                 alloc.alloc(name, g.size(name))
             else:

@@ -10,8 +10,6 @@ jnp path is the oracle and the dry-run path).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

@@ -21,12 +21,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
@@ -509,7 +507,7 @@ def _seqshard_decode_attn(cfg: ModelConfig, mesh, q, k_cache, v_cache,
         m = sc.max(-1)
         pr = jnp.exp(sc - m[..., None])
         pr = jnp.where(mk[:, None, None, :], pr, 0.0)
-        l = pr.sum(-1)
+        den = pr.sum(-1)
         if _os.environ.get("REPRO_DECODE_BASELINE"):
             acc = jnp.einsum("bkgs,bskd->bkgd", pr,
                              vc.astype(jnp.float32))
@@ -519,8 +517,8 @@ def _seqshard_decode_attn(cfg: ModelConfig, mesh, q, k_cache, v_cache,
         m_g = lax.pmax(m, "model")
         corr = jnp.exp(m - m_g)
         acc = lax.psum(acc * corr[..., None], "model")
-        l = lax.psum(l * corr, "model")
-        out = (acc / jnp.maximum(l[..., None], 1e-30)).reshape(B, 1, H, hd)
+        den = lax.psum(den * corr, "model")
+        out = (acc / jnp.maximum(den[..., None], 1e-30)).reshape(B, 1, H, hd)
         return out.astype(qb.dtype), kc, vc
 
     return jax.shard_map(
@@ -693,7 +691,6 @@ def mlstm_mixer_step(cfg: ModelConfig, mesh, p, x, state):
 def slstm_mixer_seq(cfg: ModelConfig, mesh, p, x, *, state_in=None):
     B, S, d = x.shape
     H = cfg.num_heads
-    Ph = d // H
     h = rms_norm(x, p["ln"])
     gates = (jnp.einsum("bsd,dghp->bsghp", h, p["w_in"])
              + p["b"]).astype(jnp.float32)

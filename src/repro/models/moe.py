@@ -15,7 +15,6 @@ experts local and no collectives.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

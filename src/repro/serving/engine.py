@@ -62,8 +62,8 @@ class RequestResult:
 def kv_block_bytes(cfg: ModelConfig, cache_len: int) -> int:
     """Per-request KV/state bytes at full cache length (batch=1)."""
     c = jax.eval_shape(lambda: init_cache(cfg, 1, cache_len))
-    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
-               for l in jax.tree_util.tree_leaves(c))
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(c))
 
 
 class GraphServingEngine:
@@ -78,16 +78,15 @@ class GraphServingEngine:
 
     def __init__(self, graph: Graph, *, arena_budget: Optional[int] = None,
                  partition: bool = False, micro_batch: int = 8,
-                 use_pallas: bool = False, dtype=jnp.float32):
+                 use_pallas: bool = False):
         res = schedule_graph(graph, arena_budget=arena_budget,
                              partition=partition)
         self.result = res
         self.exec_graph = res.graph if res.graph is not None else graph
         self.plan = ArenaPlanner.plan(self.exec_graph, res.schedule)
-        ArenaPlanner.validate(self.plan)
+        ArenaPlanner.validate(self.plan, self.exec_graph)
         self.executor = compile_schedule(self.exec_graph, res.schedule,
-                                         self.plan, dtype=dtype,
-                                         use_pallas=use_pallas)
+                                         self.plan, use_pallas=use_pallas)
         self.micro_batch = micro_batch
         self._batched = jax.jit(jax.vmap(self.executor.raw_fn),
                                 donate_argnums=0)

@@ -8,7 +8,7 @@ arrays here, which is exact on single-host and the CPU test rig).
 from __future__ import annotations
 
 import os
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import numpy as np

@@ -7,8 +7,7 @@ recipe.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +20,8 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(params) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       mu=jax.tree_util.tree_map(zeros, params),
                       nu=jax.tree_util.tree_map(zeros, params))
@@ -38,8 +38,8 @@ def cosine_lr(step: jax.Array, *, peak: float, warmup: int,
 
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
 
 
 def adamw_update(params, grads, state: AdamWState, *, lr: jax.Array,

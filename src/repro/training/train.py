@@ -5,9 +5,7 @@ in/out specs (built by the launcher).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -52,9 +50,9 @@ def make_train_step(model: Model, *, peak_lr: float = 3e-4,
 
             def acc_step(carry, mb):
                 (l_sum, g_sum) = carry
-                (l, m), g = micro(mb)
+                (loss, m), g = micro(mb)
                 g_sum = jax.tree_util.tree_map(jnp.add, g_sum, g)
-                return (l_sum + l, g_sum), m
+                return (l_sum + loss, g_sum), m
 
             zeros = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), state.params)

@@ -1,1 +1,19 @@
 # Markers and the fast-by-default selection live in pytest.ini.
+#
+# Hypothesis profiles: the named "ci" profile pins a fixed deadline, keeps
+# derandomization OFF (every workflow run explores fresh examples) and
+# prints the reproduction blob on failure, so a property-test flake in a
+# workflow log is reproducible locally via the printed
+# ``@reproduce_failure`` / ``@seed`` decorators.  Select it with
+# HYPOTHESIS_PROFILE=ci (the CI workflow does).
+import os
+
+try:
+    from hypothesis import settings
+except ImportError:  # pragma: no cover
+    pass
+else:
+    settings.register_profile("ci", deadline=10_000, derandomize=False, print_blob=True)
+    _profile = os.environ.get("HYPOTHESIS_PROFILE")
+    if _profile:
+        settings.load_profile(_profile)

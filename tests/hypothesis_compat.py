@@ -29,3 +29,5 @@ except ImportError:                                   # pragma: no cover
             return self
 
     st = _StrategyStub()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

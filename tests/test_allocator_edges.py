@@ -54,6 +54,66 @@ def test_arena_plan_alignment_on_real_model():
     assert all(p.offset % 16 == 0 for p in plan.placements if p.size > 0)
 
 
+# ------------------------------------------------- byte-granular + alignment
+def test_odd_int8_sizes_force_alignment_padding():
+    """Three co-live odd-sized int8 tensors under a 4-byte policy: every
+    offset aligned, and the arena pays exactly the padding the odd sizes
+    force (vs the packed byte-granular plan)."""
+    g = Graph()
+    g.add_tensor("a", 7)
+    g.add_tensor("b", 13)
+    g.add_tensor("c", 9)
+    g.add_operator("op", ["a", "b"], "c")
+    g.set_outputs(["c"])
+    sched = g.default_schedule()
+    packed = ArenaPlanner.plan(g, sched)          # pure int8: auto align 1
+    assert packed.arena_size == 7 + 13 + 9
+    plan = ArenaPlanner.plan(g, sched, alignment=4)
+    ArenaPlanner.validate(plan, g)
+    assert all(p.offset % 4 == 0 for p in plan.placements)
+    # best-fit order is (-size, start): b@0 (13 -> pad 16), c@16 (25 ->
+    # pad 28), a@28 — 7 bytes end at 35
+    assert plan.arena_size == 35 > packed.arena_size
+
+
+def test_dynamic_allocator_respects_alignment():
+    a = DynamicAllocator(alignment=8)
+    a.alloc("x", 5)
+    a.alloc("y", 3)             # first-fit cursor rounds 5 -> 8
+    assert a.addresses == {"x": 0, "y": 8}
+    a.free("x")
+    a.alloc("z", 13)            # 13 > gap [0, 8): placed past y
+    assert a.addresses["z"] == 16
+    a.defragment()              # compaction keeps offsets aligned
+    assert all(off % 8 == 0 for off in a.addresses.values())
+    assert a.addresses["y"] == 0 and a.addresses["z"] == 8
+
+
+def test_mixed_dtype_inplace_chain_aliases_one_buffer():
+    """An f32 inplace accumulator chain surrounded by odd-sized int8
+    tensors: the chain still folds to one placement, and the auto-aligned
+    plan keeps every f32 offset 4-aligned despite the odd int8 sizes."""
+    g = Graph()
+    g.add_tensor("x", 65)                         # odd int8 input
+    for k in range(3):
+        g.add_tensor(f"acc{k}", 128, (32,), dtype="float32")
+    g.add_tensor("p0", 63)
+    g.add_tensor("p1", 63)
+    g.add_operator("s0", ["x"], "p0")
+    g.add_operator("s1", ["x"], "p1")
+    g.add_operator("c0", ["p0"], "acc0")
+    g.add_operator("c1", ["acc0", "p1"], "acc1", inplace=True)
+    g.add_operator("c2", ["acc1"], "acc2", inplace=True)
+    g.set_outputs(["acc2"])
+    sched = g.default_schedule()
+    assert g.max_itemsize() == 4                  # auto alignment is 4
+    plan = ArenaPlanner.plan(g, sched)
+    ArenaPlanner.validate(plan, g)
+    offs = {plan.offset_of(f"acc{k}") for k in range(3)}
+    assert len(offs) == 1                         # one shared buffer
+    assert all(plan.offset_of(f"acc{k}") % 4 == 0 for k in range(3))
+
+
 # ---------------------------------------------------------------- zero sizes
 def test_zero_size_tensors_plan_and_dynamic_alloc():
     g = Graph()

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
-from repro.models.model import Model, init_cache, init_params
+from repro.models.model import Model, init_params
 
 pytestmark = pytest.mark.slow   # integration tier; see pytest.ini
 
@@ -56,7 +56,7 @@ def test_train_step_shapes_and_finite(arch, built):
     # gradients exist and are finite for a couple of leaves
     g = jax.grad(lambda p: model.loss_fn(p, batch, remat=False)[0])(params)
     leaves = jax.tree_util.tree_leaves(g)
-    assert all(np.isfinite(np.asarray(l)).all() for l in leaves[:4])
+    assert all(np.isfinite(np.asarray(x)).all() for x in leaves[:4])
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)

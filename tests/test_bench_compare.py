@@ -1,0 +1,86 @@
+"""Unit tests for the CI benchmark-regression gate (benchmarks/compare.py):
+bytes are gated exactly, time with tolerance + slack, coverage loss fails,
+new rows pass with a note.  Also pins that the committed baseline is
+well-formed and carries the byte/dtype metadata the gate needs.
+"""
+
+import pathlib
+
+from benchmarks.compare import compare_rows, load_rows
+
+BASELINE = pathlib.Path(__file__).parent.parent / "benchmarks" / "BENCH_baseline.json"
+
+
+def _row(name, us=100.0, arena=None, dtypes=None):
+    return {"name": name, "us_per_call": us, "arena_bytes": arena, "dtypes": dtypes}
+
+
+def _index(rows):
+    return {r["name"]: r for r in rows}
+
+
+def test_identical_runs_pass():
+    rows = _index([_row("a", 100, 4096), _row("b", 50, None)])
+    failures, notes = compare_rows(rows, dict(rows), us_tol=0.2, us_slack=0)
+    assert failures == [] and notes == []
+
+
+def test_arena_growth_fails_exactly():
+    base = _index([_row("a", 100, 4096)])
+    ok = _index([_row("a", 100, 4096)])
+    shrunk = _index([_row("a", 100, 4000)])
+    grown = _index([_row("a", 100, 4097)])
+    assert compare_rows(base, ok, 0.2, 0)[0] == []
+    assert compare_rows(base, shrunk, 0.2, 0)[0] == []
+    failures, _ = compare_rows(base, grown, 0.2, 0)
+    assert len(failures) == 1 and "bytes grew" in failures[0]
+
+
+def test_time_regression_gated_with_tol_and_slack():
+    base = _index([_row("a", 1000.0)])
+    within = _index([_row("a", 1199.0)])
+    beyond = _index([_row("a", 1201.0)])
+    assert compare_rows(base, within, 0.2, 0)[0] == []
+    failures, _ = compare_rows(base, beyond, 0.2, 0)
+    assert len(failures) == 1 and "us/call regressed" in failures[0]
+    # the absolute slack absorbs jitter on tiny rows
+    assert compare_rows(base, beyond, 0.2, 5000)[0] == []
+
+
+def test_missing_row_fails_and_new_row_notes():
+    base = _index([_row("a"), _row("gone")])
+    fresh = _index([_row("a"), _row("new")])
+    failures, notes = compare_rows(base, fresh, 0.2, 0)
+    assert len(failures) == 1 and "gone" in failures[0]
+    assert any("new row" in n for n in notes)
+
+
+def test_dtype_change_is_noted():
+    base = _index([_row("a", dtypes="float32")])
+    fresh = _index([_row("a", dtypes="int8")])
+    failures, notes = compare_rows(base, fresh, 0.2, 0)
+    assert failures == []
+    assert any("dtypes changed" in n for n in notes)
+
+
+def test_committed_baseline_is_well_formed():
+    rows, payload = load_rows(str(BASELINE))
+    assert payload["smoke"] is True
+    assert payload["units"]["arena_bytes"] == "bytes"
+    # the gate has real byte rows to hold on to, at both element widths
+    arena_rows = {n: r for n, r in rows.items() if r.get("arena_bytes") and r["arena_bytes"] > 0}
+    assert len(arena_rows) >= 10
+    dtypes = {r.get("dtypes") for r in rows.values()}
+    assert "int8" in dtypes and "float32" in dtypes
+    # a known anchor: the paper's figure1 arena is 4960 B
+    assert rows["executor.figure1.arena_B"]["arena_bytes"] == 4960
+
+
+def test_baseline_byte_rows_match_current_scheduling():
+    """The committed baseline's deterministic byte numbers must be
+    reproducible by today's schedulers — cheap rows only (figure1)."""
+    from repro.core import schedule
+    from repro.graphs import figure1_graph
+
+    rows, _ = load_rows(str(BASELINE))
+    assert rows["figure1.optimal_peak_B"]["arena_bytes"] == schedule(figure1_graph()).peak == 4960

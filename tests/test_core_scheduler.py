@@ -2,13 +2,12 @@
 (Figure 1 / Appendix A), plus property tests over random DAGs."""
 import random
 
-import pytest
 from hypothesis_compat import given, settings, st   # skips @given tests cleanly when hypothesis is absent
 
 from repro.core import (Graph, beam_schedule, greedy_schedule,
                         minimise_peak_memory, minimise_peak_memory_contracted,
                         schedule)
-from repro.graphs.figure1 import (DEFAULT_PEAK, OPTIMAL_PEAK, SIZES,
+from repro.graphs.figure1 import (DEFAULT_PEAK, OPTIMAL_PEAK,
                                   figure1_graph)
 
 

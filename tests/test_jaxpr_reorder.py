@@ -3,10 +3,9 @@ it actually reduces peak liveness on branchy JAX programs."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st   # skips @given tests cleanly when hypothesis is absent
 
-from repro.core.jaxpr_reorder import (ReorderReport, peak_liveness,
+from repro.core.jaxpr_reorder import (peak_liveness,
                                       jaxpr_to_graph, reorder,
                                       reorder_closed_jaxpr)
 

@@ -1,9 +1,7 @@
 """MoE routing invariants: top-k renormalisation, capacity semantics,
 correctness of the scatter/gather expert pass against a dense reference."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st   # skips @given tests cleanly when hypothesis is absent
 
 from repro.models.moe import _expert_pass, moe_ffn, router_topk

@@ -18,7 +18,7 @@ Every schedule any method returns must pass ``graph.is_valid_schedule``.
 """
 from hypothesis_compat import given, settings, st
 
-from repro.core import (Graph, beam_schedule, greedy_schedule,
+from repro.core import (ArenaPlanner, Graph, beam_schedule, greedy_schedule,
                         minimise_peak_memory,
                         minimise_peak_memory_contracted, schedule)
 
@@ -86,3 +86,32 @@ def test_beam_returns_valid_schedule(g):
     res = beam_schedule(g, width=8)
     assert g.is_valid_schedule(res.schedule)
     assert res.peak >= minimise_peak_memory(g).peak
+
+
+def _as_f32(g):
+    """The same DAG with every tensor widened to float32 (4 bytes per
+    element) — the byte-granular mirror of an int8 graph."""
+    f = Graph()
+    for name, t in g.tensors.items():
+        f.add_tensor(name, 4 * t.size, t.shape, dtype="float32")
+    for op in g.operators:
+        f.add_operator(op.name, list(op.inputs), op.output, kind=op.kind)
+    f.set_outputs(g.outputs)
+    return f
+
+
+@given(dags())
+@settings(max_examples=30, deadline=None)
+def test_int8_arena_never_exceeds_f32(g):
+    """Byte-granular quantization invariant: for ANY dag, the int8 build's
+    peak and planned arena never exceed the f32 build's.  In fact the
+    optimum scales exactly by the itemsize (all sizes scale uniformly), so
+    the stronger 4x equality is asserted for the peak."""
+    f = _as_f32(g)
+    rq, rf = schedule(g), schedule(f)
+    assert 4 * rq.peak == rf.peak
+    pq = ArenaPlanner.plan(g, rq.schedule)
+    pf = ArenaPlanner.plan(f, rf.schedule)
+    ArenaPlanner.validate(pq, g)
+    ArenaPlanner.validate(pf, f)
+    assert pq.arena_size <= pf.arena_size

@@ -1,0 +1,124 @@
+"""The post-training int8 pass: calibration, rewrite invariants, accuracy.
+
+Bit-identity of the int8 executors is covered by the differential grid in
+``test_executor_diff.py``; this module pins the quantization *pass* itself:
+qparams arithmetic, graph-rewrite structure (names/topology/byte sizes),
+the calibration-free scheduling shadow, and end-to-end accuracy of the
+quantized model against its float reference.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import schedule
+from repro.core.graph import Graph
+from repro.graphs import (
+    int8_scheduling_graph,
+    mobilenet_v1_graph,
+    quantize_graph,
+    random_input,
+)
+from repro.graphs.quantize import activation_qparams, weight_qparams
+from repro.mcu import MicroInterpreter
+
+
+def test_activation_qparams_zero_is_exact():
+    """The range is widened to include 0 and zp is the image of real 0 —
+    the property SAME padding and the relu clamp rely on."""
+    for lo, hi in [(-1.3, 2.7), (0.2, 5.0), (-4.0, -1.0), (0.0, 0.0)]:
+        qp = activation_qparams(lo, hi)
+        assert -128 <= qp.zero_point <= 127
+        assert qp.quantize(np.zeros(3)).tolist() == [qp.zero_point] * 3
+        # representable range covers the observed one
+        lo0, hi0 = min(0.0, lo), max(0.0, hi)
+        assert qp.dequantize(np.int8(-128)) <= lo0 + qp.scale
+        assert qp.dequantize(np.int8(127)) >= hi0 - qp.scale
+
+
+def test_quantize_dequantize_roundtrip_error_bounded():
+    qp = activation_qparams(-3.0, 3.0)
+    x = np.linspace(-3, 3, 1001, dtype=np.float32)
+    err = np.abs(qp.dequantize(qp.quantize(x)) - x)
+    assert float(err.max()) <= qp.scale / 2 + 1e-7
+
+
+def test_weight_qparams_symmetric():
+    w = np.array([-0.5, 0.25, 0.5], np.float32)
+    wq, s = weight_qparams(w)
+    assert wq.dtype == np.int8
+    assert wq.tolist() == [-127, 64, 127]  # round-half-even: 63.5 -> 64
+    assert s == pytest.approx(0.5 / 127)
+
+
+def _tiny_chain() -> Graph:
+    from repro.graphs.cnn_ops import CNNBuilder
+
+    g = Graph()
+    b = CNNBuilder(g)
+    x = b.input("input", 12, 12, 3)
+    x = b.conv(x, 8, k=3, stride=2)
+    x = b.dwconv(x, k=3)
+    x = b.maxpool(x, k=2, stride=2)
+    x = b.avgpool(x)
+    x = b.fc(x, 4)
+    g.set_outputs([x])
+    return g
+
+
+def test_rewrite_preserves_structure_and_quarters_bytes():
+    g = _tiny_chain()
+    qm = quantize_graph(g, random_input(g))
+    q = qm.graph
+    assert set(q.tensors) == set(g.tensors)
+    assert [op.name for op in q.operators] == [op.name for op in g.operators]
+    assert q.outputs == g.outputs
+    for name, t in g.tensors.items():
+        qt = q.tensors[name]
+        assert qt.dtype == "int8" and 4 * qt.size == t.size
+        assert qt.shape == t.shape
+    for fop, qop in zip(g.operators, q.operators):
+        assert qop.kind == "q" + fop.kind
+        if "weight_bytes" in fop.attrs:
+            assert 4 * qop.attrs["weight_bytes"] == fop.attrs["weight_bytes"]
+
+
+def test_int8_scheduling_graph_matches_quantized_sizes():
+    g = _tiny_chain()
+    shadow = int8_scheduling_graph(g)
+    real = quantize_graph(g, random_input(g)).graph
+    for name in g.tensors:
+        assert shadow.size(name) == real.size(name)
+    assert schedule(shadow).peak == schedule(real).peak == schedule(g).peak // 4
+
+
+def test_quantized_mobilenet_tracks_float_reference():
+    """End-to-end accuracy: dequantized int8 outputs stay within a fraction
+    of the output range of the f32 model (loose by design — this guards
+    against sign/zero-point bugs, not against quantization error)."""
+    g = mobilenet_v1_graph()  # 0.25 @ 96
+    x = random_input(g)
+    qm = quantize_graph(g, x)
+    ref = MicroInterpreter(g).run(x)
+    got = MicroInterpreter(qm.graph).run(qm.quantize_inputs(x))
+    out = qm.dequantize_outputs({o: got.outputs[o] for o in qm.graph.outputs})
+    for o in g.outputs:
+        full_range = 255 * qm.qparams[o].scale
+        err = np.max(np.abs(out[o] - ref.outputs[o]))
+        assert err <= 0.2 * full_range, (err, full_range)
+
+
+def test_quantize_rejects_unknown_kind():
+    g = Graph()
+    g.add_tensor("a", 16, (4,), dtype="float32")
+    g.add_tensor("b", 16, (4,), dtype="float32")
+    g.add_operator("op", ["a"], "b", kind="mystery", fn=lambda x: x * 2.0)
+    g.set_outputs(["b"])
+    with pytest.raises(ValueError, match="unsupported operator kind"):
+        quantize_graph(g, {"a": np.ones((4,), np.float32)})
+
+
+def test_interpreter_rejects_float_input_on_int8_graph():
+    g = _tiny_chain()
+    qm = quantize_graph(g, random_input(g))
+    with pytest.raises(ValueError, match="declares int8"):
+        MicroInterpreter(qm.graph).run(random_input(g))

@@ -1,8 +1,7 @@
 """Roofline machinery: HLO collective census + three-term report."""
-import jax.numpy as jnp
 import pytest
 
-from repro.analysis.roofline import (TPU_V5E, collective_bytes_from_hlo,
+from repro.analysis.roofline import (collective_bytes_from_hlo,
                                      model_flops, roofline_report)
 from repro.configs import get_config
 

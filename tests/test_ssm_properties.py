@@ -1,10 +1,8 @@
 """Property tests for the recurrent substrate: the chunked linear-attention
 engine must equal the naive sequential recurrence for any chunk size, and
 decode steps must continue prefill states exactly."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis_compat import given, settings, st   # skips @given tests cleanly when hypothesis is absent
 
 from repro.models.ssm import (causal_conv1d, chunked_linear_attention,
@@ -58,7 +56,8 @@ def test_chunked_equals_naive_recurrence(seed, chunk, normalize):
 def test_decode_step_continues_chunked_state(seed):
     rng = np.random.default_rng(seed)
     B, S, H, N, P = 1, 9, 2, 4, 4
-    mk = lambda *sh: jnp.asarray(rng.standard_normal(sh), jnp.float32)
+    def mk(*sh):
+        return jnp.asarray(rng.standard_normal(sh), jnp.float32)
     q, k = mk(B, S + 1, H, N), mk(B, S + 1, H, N)
     v = mk(B, S + 1, H, P)
     ld = -jnp.abs(mk(B, S + 1, H))

@@ -1,6 +1,5 @@
 """Training substrate: optimizer semantics, loss decreases on learnable
 synthetic data, microbatching equivalence, checkpoint round-trip."""
-import os
 import tempfile
 
 import jax
