@@ -7,6 +7,15 @@
 #                 against (see benchmarks/compare.py for the CI gate)
 #   --only a,b    run only the named benchmarks (e.g. figure1,executor)
 #   --smoke       small-graph subset inside each benchmark (CI)
+#   --update-baseline [PATH]
+#                 envelope-merge this run into the committed baseline
+#                 (default benchmarks/BENCH_baseline.json) instead of
+#                 hand-editing it: us_per_call takes the max of old and
+#                 new (first-call timings vary run to run — the baseline
+#                 is an envelope), arena_bytes are exact and may only
+#                 shrink; growth aborts the merge unless
+#                 --allow-bytes-growth is passed (a deliberate memory
+#                 regression must be visible in the diff, not slipped in)
 #
 # Benchmarks call ``report(name, us_per_call, derived, **meta)``; the
 # recognised meta keys are ``arena_bytes`` (peak/arena BYTES — the unit is
@@ -19,6 +28,53 @@ import os
 import sys
 import traceback
 
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                                "BENCH_baseline.json")
+
+
+def merge_baseline(baseline: dict, fresh_rows: list,
+                   allow_bytes_growth: bool = False) -> list:
+    """Envelope-merge ``fresh_rows`` into ``baseline`` in place: max-us,
+    exact bytes (growth refused), new rows appended, rows not re-run kept.
+    Returns a list of human-readable change notes; raises ``SystemExit``
+    on a bytes regression without ``allow_bytes_growth``."""
+    by_name = {r["name"]: r for r in baseline["rows"]}
+    notes = []
+    for row in fresh_rows:
+        old = by_name.get(row["name"])
+        if old is None:
+            by_name[row["name"]] = dict(row)
+            baseline["rows"].append(by_name[row["name"]])
+            notes.append(f"new row {row['name']}")
+            continue
+        ob, nb = old.get("arena_bytes"), row.get("arena_bytes")
+        if ob is not None and nb is None:
+            # a fresh row without bytes (e.g. the -1 budget-exhausted
+            # sentinel) must not wipe the committed exact figure — that
+            # would silently disarm the compare.py growth gate for it
+            raise SystemExit(
+                f"refusing to merge: {row['name']} lost its arena_bytes "
+                f"(baseline has {ob}); fix the benchmark row before "
+                f"refreshing the baseline")
+        if ob is not None and nb is not None and nb > ob:
+            if not allow_bytes_growth:
+                raise SystemExit(
+                    f"refusing to loosen baseline: {row['name']} "
+                    f"arena_bytes grew {ob} -> {nb} (+{nb - ob} B); "
+                    f"pass --allow-bytes-growth if this regression is "
+                    f"deliberate")
+            notes.append(f"{row['name']}: bytes grew {ob} -> {nb} "
+                         f"(--allow-bytes-growth)")
+        elif ob != nb:
+            notes.append(f"{row['name']}: bytes {ob} -> {nb}")
+        ou, nu = old.get("us_per_call"), row.get("us_per_call")
+        if ou is not None and nu is not None and nu > ou:
+            notes.append(f"{row['name']}: us envelope {ou:.0f} -> {nu:.0f}")
+        old.update({k: v for k, v in row.items() if k != "us_per_call"})
+        old["us_per_call"] = (max(ou, nu) if ou is not None
+                              and nu is not None else nu or ou)
+    return notes
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -30,6 +86,13 @@ def main(argv=None) -> None:
                          "kernels,roofline)")
     ap.add_argument("--smoke", action="store_true",
                     help="restrict benchmarks to their small-graph subsets")
+    ap.add_argument("--update-baseline", metavar="PATH", nargs="?",
+                    const=DEFAULT_BASELINE, default=None,
+                    help="envelope-merge this run into the committed "
+                         "baseline (max-us, exact bytes; see header)")
+    ap.add_argument("--allow-bytes-growth", action="store_true",
+                    help="permit --update-baseline to record larger "
+                         "arena_bytes (deliberate memory regression)")
     args = ap.parse_args(argv)
     if args.smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
@@ -72,25 +135,27 @@ def main(argv=None) -> None:
             traceback.print_exc()
             failed.append(mod.__name__)
 
+    json_rows = [{
+        "name": name,
+        "us_per_call": us,
+        "derived": derived if isinstance(derived, (int, float, str,
+                                                   bool)) else
+        repr(derived),
+        # fallback: an int `derived` is a byte figure on legacy
+        # rows — but only when non-negative (benchmarks use -1 as
+        # a "budget exhausted" sentinel, which must not enter the
+        # strict bytes gate)
+        "arena_bytes": meta.get(
+            "arena_bytes",
+            derived if isinstance(derived, int)
+            and not isinstance(derived, bool)
+            and derived >= 0 else None),
+        "dtypes": meta.get("dtypes"),
+    } for name, us, derived, meta in rows]
+
     if args.json:
         payload = {
-            "rows": [{
-                "name": name,
-                "us_per_call": us,
-                "derived": derived if isinstance(derived, (int, float, str,
-                                                           bool)) else
-                repr(derived),
-                # fallback: an int `derived` is a byte figure on legacy
-                # rows — but only when non-negative (benchmarks use -1 as
-                # a "budget exhausted" sentinel, which must not enter the
-                # strict bytes gate)
-                "arena_bytes": meta.get(
-                    "arena_bytes",
-                    derived if isinstance(derived, int)
-                    and not isinstance(derived, bool)
-                    and derived >= 0 else None),
-                "dtypes": meta.get("dtypes"),
-            } for name, us, derived, meta in rows],
+            "rows": json_rows,
             "failed": failed,
             "smoke": args.smoke,
             "units": {"us_per_call": "microseconds",
@@ -99,6 +164,32 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {len(rows)} rows to {args.json}")
+
+    if args.update_baseline:
+        if failed:
+            print(f"# NOT updating baseline: failed benchmarks {failed}")
+        else:
+            try:
+                with open(args.update_baseline) as f:
+                    baseline = json.load(f)
+            except FileNotFoundError:
+                baseline = {"rows": [],
+                            "units": {"us_per_call": "microseconds",
+                                      "arena_bytes": "bytes"}}
+            notes = merge_baseline(baseline, json_rows,
+                                   args.allow_bytes_growth)
+            baseline["rows"].sort(key=lambda r: r["name"])
+            baseline["note"] = ("envelope baseline: us_per_call is the max "
+                                "over merged runs on the reference machine; "
+                                "arena_bytes are exact (refreshed via "
+                                "run.py --update-baseline)")
+            with open(args.update_baseline, "w") as f:
+                json.dump(baseline, f, indent=2)
+                f.write("\n")
+            for n in notes:
+                print(f"# baseline: {n}")
+            print(f"# merged {len(json_rows)} rows into "
+                  f"{args.update_baseline}")
 
     if failed:
         print(f"# FAILED: {failed}")

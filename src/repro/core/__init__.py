@@ -7,9 +7,10 @@ from .heuristics import (beam_schedule, build_chains, greedy_schedule,
 from .allocator import (ArenaPlan, ArenaPlanner, DynamicAllocator, Placement,
                         inplace_alias_groups, static_plan_size,
                         tensor_lifetimes)
-from .partition import (PEX_ATTR, PartitionResult, Segment, SliceSpec,
-                        apply_partition, partition_graph, plan_partition,
-                        sliceable_runs)
+from .partition import (PEX_ATTR, Cascade, CascadeResult, PartitionResult,
+                        Segment, SliceSpec, apply_cascade, apply_partition,
+                        cascade_graph, partition_graph, plan_cascade,
+                        plan_partition, sliceable_runs)
 from . import profile
 
 __all__ = [
@@ -19,7 +20,8 @@ __all__ = [
     "minimise_peak_memory_contracted", "schedule",
     "ArenaPlan", "ArenaPlanner", "DynamicAllocator", "Placement",
     "inplace_alias_groups", "static_plan_size", "tensor_lifetimes",
-    "PEX_ATTR", "PartitionResult", "Segment", "SliceSpec",
-    "apply_partition", "partition_graph", "plan_partition",
+    "PEX_ATTR", "Cascade", "CascadeResult", "PartitionResult", "Segment",
+    "SliceSpec", "apply_cascade", "apply_partition", "cascade_graph",
+    "partition_graph", "plan_cascade", "plan_partition",
     "sliceable_runs", "profile",
 ]

@@ -356,20 +356,57 @@ def schedule(graph: Graph, exact_limit: int = 18, contract_limit: int = 40,
     graph.  The rewritten graph's insertion order already encodes the
     partial-execution order, so it is scheduled with the cheap candidates
     (default + greedy) only.
+
+    **Cascaded-streaming escalation.**  When an ``arena_budget`` is given
+    and whole-externals partial execution still misses it, the graph is
+    rewritten by ``partition.cascade_graph`` — adjacent sliceable segments
+    chained through ring buffers so no inter-segment tensor ever exists
+    whole (capped on the halo-recompute MACs fraction) — followed by a
+    whole-externals pass over the cascaded graph for any remaining
+    over-budget runs (the cascade's tail).  The lowest peak wins.
     """
     best = _schedule_plain(graph, exact_limit, contract_limit, beam_width)
     want = partition or (arena_budget is not None
                          and best.peak > arena_budget)
     if not want:
         return best
-    from .partition import partition_graph   # deferred: partition is optional
+    from .partition import (cascade_graph,    # deferred: partition is
+                            partition_graph)  # optional
     pr = partition_graph(graph, budget=arena_budget,
                          **(partition_opts or {}))
-    if not pr.segments:
+    if pr.segments:
+        pg = pr.graph
+        pbest = min(_cheap_candidates(pg), key=lambda r: r.peak)
+        if pbest.peak < best.peak:
+            best = dataclasses.replace(pbest, graph=pg,
+                                       method=pbest.method + "+pex",
+                                       extra_macs_frac=pr.extra_macs_frac)
+    if arena_budget is None or best.peak <= arena_budget:
         return best
-    pg = pr.graph
-    pbest = min(_cheap_candidates(pg), key=lambda r: r.peak)
-    if pbest.peak < best.peak:
-        return dataclasses.replace(pbest, graph=pg,
-                                   method=pbest.method + "+pex")
+    # the cascade planner honours the caller's shared partition knobs —
+    # in particular a tightened overhead_cap (the halo-recompute latency
+    # budget) must bind the escalation too, not just the whole-Pex passes
+    shared = {k: v for k, v in (partition_opts or {}).items()
+              if k in ("max_k", "overhead_cap", "k_choices")}
+    cr = cascade_graph(graph, budget=arena_budget, **shared)
+    if not cr.cascades:
+        return best
+    cg = cr.graph
+    frac = cr.extra_macs_frac
+    cbest = min(_cheap_candidates(cg), key=lambda r: r.peak)
+    method = cbest.method + "+cascade"
+    if cbest.peak > arena_budget:
+        # the cascade's conventional tail may itself be over budget —
+        # whole-externals partial execution composes over the cascaded graph
+        tr = partition_graph(cg, budget=arena_budget,
+                             **(partition_opts or {}))
+        if tr.segments:
+            tbest = min(_cheap_candidates(tr.graph), key=lambda r: r.peak)
+            if tbest.peak < cbest.peak:
+                cg, cbest = tr.graph, tbest
+                method = tbest.method + "+cascade+pex"
+                frac = max(frac, tr.extra_macs_frac)
+    if cbest.peak < best.peak:
+        return dataclasses.replace(cbest, graph=cg, method=method,
+                                   extra_macs_frac=frac)
     return best

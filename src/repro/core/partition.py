@@ -509,3 +509,622 @@ def partition_graph(graph: Graph, budget: Optional[int] = None,
     if not segments:
         return PartitionResult(graph, [])
     return PartitionResult(apply_partition(graph, segments), segments)
+
+
+# ======================================================= cascaded streaming
+# Whole-externals partial execution (above) charges every segment's external
+# input whole and materialises its output whole — a ~280 KB floor under
+# MobileNet-1.0@192 int8 (108 KB input + accumulator + slice live).  Full
+# Pex (Liberis & Lane 2022) and MCUNetV2's patch-based inference break that
+# floor by *cascading*: adjacent segments execute interleaved, slice by
+# slice, and the tensor between two cascaded segments never exists whole.
+# Only a rolling window of its most recent rows is kept — a **ring buffer**
+# sized by the consumer's receptive field (kernel + stride carry from the
+# SAME-padding row map):
+#
+#   input ──seg0──▶ [ring: R0 rows] ──seg1──▶ [ring: R1 rows] ──seg2──▶ out
+#
+# Per final-output slice s, each segment i produces only the *delta* rows
+# its consumer newly needs (rows already in the ring are retained, not
+# recomputed — cascades also cut halo recompute vs whole-externals), pushes
+# them into the ring at position ``row % R`` (``pex_ring_push``, an inplace
+# rolling write — the SSA chain of ring states aliases to ONE buffer via the
+# existing inplace accounting), and the consumer reads its halo'd window
+# back out as a contiguous tensor (``pex_ring_read``).  The cost model
+# charges an inter-segment tensor ``ring_rows * row_bytes`` instead of its
+# full size; externals of the first segment and the cascade's final output
+# are still charged whole.
+
+
+@dataclasses.dataclass
+class Cascade:
+    """A planned cascade: consecutive sub-segments of one sliceable run,
+    ring row counts for the boundaries between them, and the slice count K
+    of the final output that drives the interleaved execution."""
+
+    segments: List[List[Operator]]
+    k: int
+    ring_rows: List[int]          # per boundary i (= output of segments[i])
+    est_peak: int
+    extra_macs_frac: float
+    min_rows: int = 1             # per-iteration chunk floor (see plans)
+    rate_div: int = 1             # pipeline slowdown factor (see plans)
+
+    @property
+    def ops(self) -> List[Operator]:
+        return [op for seg in self.segments for op in seg]
+
+
+@dataclasses.dataclass
+class _CascadeSlice:
+    """Row bookkeeping of one final-output slice across the cascade."""
+
+    deltas: List[Tuple[int, int]]               # per segment: new out rows
+    plans: List[Optional[_SlicePlan]]           # per segment (None = empty)
+    reads: List[Optional[Tuple[int, int]]]      # per segment i>0: ring window
+
+
+def _backprop_segment(graph: Graph, ops: Sequence[Operator],
+                      d_lo: int, d_hi: int) -> _SlicePlan:
+    """Back-propagate an output row range through one segment's ops (the
+    single-segment ``slice_plans`` inner loop, reused per cascade delta)."""
+    out: Dict[str, Tuple[int, int]] = {}
+    ins: Dict[str, List[Optional[Tuple[int, int, int, int]]]] = {}
+    a, b = d_lo, d_hi
+    for d in range(len(ops) - 1, -1, -1):
+        op = ops[d]
+        spec = spec_of(op)
+        assert spec is not None
+        out[op.name] = (a, b)
+        sliced = _sliced_indices(op)
+        row_plan: List[Optional[Tuple[int, int, int, int]]] = []
+        for idx, inp in enumerate(op.inputs):
+            if idx not in sliced:
+                row_plan.append(None)
+                continue
+            h_in = _height(graph, inp)
+            assert h_in is not None
+            row_plan.append(in_rows(spec.kernel, spec.stride, h_in, a, b))
+        ins[op.name] = row_plan
+        if d > 0:
+            ci = _chain_input_index(op, ops[d - 1].output)
+            lo, hi, _, _ = row_plan[ci]  # type: ignore[misc]
+            a, b = lo, hi
+    return _SlicePlan(out, ins)
+
+
+def _seg_need_hi(graph: Graph, ops: Sequence[Operator], ob: int) -> int:
+    """Highest input row (exclusive) of the segment's chain input needed to
+    produce output rows [*, ob) — the hi of the row-map composition."""
+    b = ob
+    for op in reversed(ops):
+        spec = spec_of(op)
+        assert spec is not None
+        if spec.kernel == 1 and spec.stride == 1:
+            continue                    # elementwise: hi passes through
+        h_in = _height(graph, op.inputs[_sliced_indices(op)[0]])
+        assert h_in is not None
+        _, pad_beg, _ = same_pads(h_in, spec.kernel, spec.stride)
+        b = min((b - 1) * spec.stride - pad_beg + spec.kernel, h_in)
+    return b
+
+
+def cascade_slice_plans(graph: Graph, segments: Sequence[List[Operator]],
+                        k: int, min_rows: int = 1, rate_div: int = 1
+                        ) -> Tuple[List[_CascadeSlice], List[int]]:
+    """Forward streaming schedule of a cascade, plus the ring size (rows)
+    of every boundary.
+
+    Each iteration advances every segment (first to last) by at most its
+    steady-state chunk — ``ceil(h_final / k)`` rows of the final output,
+    scaled upstream by the consumer segments' stride product, floored at
+    ``min_rows`` (deep low-resolution segments are cheap per row, so a
+    bigger chunk there buys halo-recompute savings at almost no memory
+    cost) — never past what its producer has already pushed into the
+    ring, and never past what its consumer's next chunk demands (a
+    backward demand pass per iteration; eager production would sit in the
+    ring as pure lag).  Capping the
+    chunk is what breaks the warm-up: the receptive field of the first
+    output rows ramps up over several small iterations instead of being
+    materialised in one fat step, so neither the rings nor the per-step
+    working set ever hold a whole warm-up window.  The last segment
+    finishes at the final iteration; early iterations may leave it (and
+    any downstream segment) with an empty delta while upstream primes.
+
+    A boundary's ring must hold, after iteration t, every row from the
+    oldest one a future read still needs to the newest one pushed —
+    ``ring_rows = max_t (pushed_hi - oldest_needed)``; rows are placed at
+    ``row % ring_rows``, so a row is overwritten exactly when the ring has
+    advanced a full revolution past it, by which time (monotone windows)
+    no reader wants it."""
+    m = len(segments)
+    heights: List[int] = []
+    for seg in segments:
+        h = _height(graph, seg[-1].output)
+        assert h is not None
+        heights.append(h)
+    h_final = heights[-1]
+    assert 2 <= k <= h_final
+    caps = list(_cascade_caps(graph, segments, k, min_rows, rate_div))
+    prev = [0] * m                      # rows produced so far, per segment
+    slices: List[_CascadeSlice] = []
+    guard = m + 4 + sum(-(-heights[i] // caps[i]) for i in range(m))
+    while prev[-1] < h_final and len(slices) < guard:
+        # demand pass (backward): a producer must never run ahead of what
+        # its consumer's next chunk will read — eager production would sit
+        # in the ring as pure lag and inflate ring_rows past the
+        # kernel+stride-carry window the cost model is built around
+        demand = [0] * m
+        demand[m - 1] = min(h_final, prev[m - 1] + caps[m - 1])
+        for i in range(m - 2, -1, -1):
+            demand[i] = min(heights[i],
+                            max(prev[i],
+                                _seg_need_hi(graph, segments[i + 1],
+                                             demand[i + 1])))
+        deltas: List[Tuple[int, int]] = [(0, 0)] * m
+        plans: List[Optional[_SlicePlan]] = [None] * m
+        reads: List[Optional[Tuple[int, int]]] = [None] * m
+        for i in range(m):
+            d_lo = prev[i]
+            ob = min(d_lo + caps[i], demand[i])
+            if i > 0:
+                # never read past what the producer has pushed so far
+                while ob > d_lo and _seg_need_hi(graph, segments[i],
+                                                 ob) > prev[i - 1]:
+                    ob -= 1
+            if ob <= d_lo:
+                deltas[i] = (d_lo, d_lo)
+                continue
+            deltas[i] = (d_lo, ob)
+            plan = _backprop_segment(graph, segments[i], d_lo, ob)
+            plans[i] = plan
+            if i > 0:
+                first = segments[i][0]
+                ci = _chain_input_index(first, segments[i - 1][-1].output)
+                lo, hi, _, _ = plan.ins[first.name][ci]  # type: ignore[misc]
+                reads[i] = (lo, hi)
+            prev[i] = ob
+        slices.append(_CascadeSlice(deltas, plans, reads))
+    assert prev[-1] == h_final, "cascade streaming failed to make progress"
+
+    # ring sizing: occupancy after iteration t = pushed_hi - oldest row any
+    # read at t' >= t still needs (window lows are monotone)
+    ring_need = [0] * (m - 1)
+    n = len(slices)
+    for i in range(m - 1):
+        hi_after = []
+        h = 0
+        for cs in slices:
+            h = max(h, cs.deltas[i][1])
+            hi_after.append(h)
+        lo_next: List[Optional[int]] = [None] * n
+        nxt: Optional[int] = None
+        for t in range(n - 1, -1, -1):
+            r = slices[t].reads[i + 1]
+            if r is not None:
+                nxt = r[0]
+            lo_next[t] = nxt
+        for t in range(n):
+            if lo_next[t] is not None:
+                ring_need[i] = max(ring_need[i],
+                                   hi_after[t] - min(lo_next[t],
+                                                     hi_after[t]))
+    return slices, ring_need
+
+
+def estimate_cascade(graph: Graph, segments: Sequence[List[Operator]],
+                     k: int, min_rows: int = 1, rate_div: int = 1
+                     ) -> Tuple[int, float, List[int]]:
+    """(estimated peak bytes, halo-recompute MACs fraction, ring rows).
+
+    Charges: every cascade-external input whole, each boundary at
+    ``ring_rows * row_bytes`` (the streaming saving), the final output
+    whole (the inplace concat accumulator), and the fattest per-slice
+    step.  Boundary rows are produced exactly once — recompute happens
+    only *inside* segments, so cascades also shrink the extra-MACs cost."""
+    slices, rings = cascade_slice_plans(graph, segments, k, min_rows,
+                                        rate_div)
+    members = [op for seg in segments for op in seg]
+    ext_bytes = sum(graph.size(e) for e in _external_inputs(members))
+    out_bytes = graph.size(segments[-1][-1].output)
+    ring_bytes = sum(r * _row_bytes(graph, seg[-1].output)
+                     for r, seg in zip(rings, segments[:-1]))
+    slice_live = 0
+    rows_done: Dict[str, int] = {}
+    for cs in slices:
+        for i, seg in enumerate(segments):
+            plan = cs.plans[i]
+            if plan is None:
+                continue
+            for op in seg:
+                oa, ob = plan.out[op.name]
+                step = (ob - oa) * _row_bytes(graph, op.output)
+                for idx, rp in enumerate(plan.ins[op.name]):
+                    if rp is None:
+                        continue
+                    # boundary inputs: the ring itself is charged whole in
+                    # ring_bytes; the read materialises the halo'd window
+                    # once, same cost shape as an external extract
+                    lo, hi, _, _ = rp
+                    step += (hi - lo) * _row_bytes(graph, op.inputs[idx])
+                slice_live = max(slice_live, step)
+                rows_done[op.name] = rows_done.get(op.name, 0) + (ob - oa)
+    base_macs = extra_macs = 0
+    for op in members:
+        h = _height(graph, op.output)
+        assert h is not None
+        base_macs += h * _macs_per_row(graph, op)
+        extra = rows_done.get(op.name, 0) - h
+        extra_macs += max(0, extra) * _macs_per_row(graph, op)
+    frac = extra_macs / base_macs if base_macs else 0.0
+    return ext_bytes + ring_bytes + out_bytes + slice_live, frac, rings
+
+
+def _cut_candidates(graph: Graph, run: Sequence[Operator]) -> List[int]:
+    """Positions p where ``run[:p]`` / ``run[p:]`` is a sensible boundary:
+    after every op that shrinks the spatial height (stride > 1) — the
+    boundary tensor is smallest right after a stride level."""
+    cuts = []
+    h_prev = _height(graph, run[0].inputs[_sliced_indices(run[0])[0]])
+    for p, op in enumerate(run):
+        h = _height(graph, op.output)
+        if h is not None and h_prev is not None and h < h_prev \
+                and 0 < p + 1 < len(run):
+            cuts.append(p + 1)
+        h_prev = h
+    return cuts
+
+
+def _cascade_caps(graph: Graph, segments: Sequence[List[Operator]],
+                  k: int, min_rows: int, rate_div: int) -> Tuple[int, ...]:
+    """The effective per-segment chunk caps a (k, min_rows, rate_div)
+    triple resolves to: the stride-steady rate (``ceil(h_final/k)`` final
+    rows, scaled upstream by consumer stride products) divided by
+    ``rate_div`` (a slower pipeline: smaller chunks, smaller rings and
+    working set, more iterations), floored at ``min_rows`` (deep
+    low-resolution segments are cheap per row, so bigger chunks there cut
+    halo recompute at almost no memory cost).  Single source of truth —
+    ``cascade_slice_plans`` paces with these caps and the planner
+    deduplicates estimate candidates on them (distinct triples often
+    collapse to the same caps)."""
+    heights = [_height(graph, seg[-1].output) for seg in segments]
+    steady = [0] * len(segments)
+    steady[-1] = -(-heights[-1] // k)       # type: ignore[operator]
+    for i in range(len(segments) - 2, -1, -1):
+        stride_prod = 1
+        for op in segments[i + 1]:
+            stride_prod *= spec_of(op).stride   # type: ignore[union-attr]
+        steady[i] = max(1, steady[i + 1] * stride_prod)
+    return tuple(min(h, max(-(-c // rate_div), min_rows))  # type: ignore
+                 for c, h in zip(steady, heights))
+
+
+def plan_cascade(graph: Graph, budget: Optional[int] = None,
+                 max_k: int = 16, overhead_cap: float = 0.25,
+                 k_choices: Sequence[int] = (2, 3, 4, 6, 8, 12, 16),
+                 max_cuts: int = 8,
+                 min_rows_choices: Sequence[int] = (1, 2, 4),
+                 rate_div_choices: Sequence[int] = (1, 2, 4)
+                 ) -> List[Cascade]:
+    """Choose, per sliceable run, the best (end, cut set, K, chunk floor,
+    rate divisor) — ranked like ``_choose_in_run``: meeting the budget
+    first, then estimated peak, halo overhead, K.
+
+    The cascade may **end early** — at the boundary right after a stride
+    level, where the feature map is small — leaving the run's tail to
+    conventional scheduling: driving slices from the network's final
+    low-resolution output would make slice 0's receptive field global and
+    the rings as tall as the tensors they replace.  An early end's
+    estimate is floored by the tail's fattest single step, so an end that
+    merely shifts the peak into the tail cannot rank as a win.
+
+    Cut sets searched: every subset of the stride-level candidates, plus
+    suffixes of two structural families — a boundary right before every
+    windowed op (each [windowed, 1x1...] block becomes a segment whose
+    1x1 tail recomputes nothing) and all-singletons (every interior tensor
+    retained in a kernel-sized ring: zero recompute, maximum rings).
+    Suffixes merge the first ops into one head segment, which reads the
+    (whole, already-charged) external input — recompute there trades
+    against rings that would sit next to the fattest feature maps.  Only
+    cascades with at least two segments qualify — a single segment is
+    whole-externals Pex."""
+    import itertools
+
+    cascades: List[Cascade] = []
+    for run in sliceable_runs(graph):
+        if len(run) < 3:
+            continue
+        cuts_all = _cut_candidates(graph, run)[:max_cuts]
+        if not cuts_all:
+            continue
+        windowed = tuple(
+            p for p in range(1, len(run))
+            if (spec_of(run[p]).kernel > 1          # type: ignore[union-attr]
+                or spec_of(run[p]).stride > 1))     # type: ignore[union-attr]
+        singles = tuple(range(1, len(run)))
+        best: Optional[Tuple[Tuple, List[List[Operator]], int, int,
+                             float, List[int], int, int]] = None
+        for end in sorted(set(cuts_all) | {len(run)}):
+            ops_e = run[:end]
+            h_final = _height(graph, ops_e[-1].output)
+            if h_final is None or h_final < 2 or len(ops_e) < 2:
+                continue
+            tail_floor = (_local_baseline(graph, run[end:])
+                          if end < len(run) else 0)
+            ends_cuts = [c for c in cuts_all if c < end]
+            if not ends_cuts:
+                continue
+            cut_sets = [cuts for r in range(1, len(ends_cuts) + 1)
+                        for cuts in itertools.combinations(ends_cuts, r)]
+            for fam in (windowed, singles,
+                        tuple(sorted(set(windowed) | set(ends_cuts)))):
+                fam_e = tuple(c for c in fam if c < end)
+                for j in range(min(4, len(fam_e))):
+                    suffix = fam_e[j:]
+                    if suffix and suffix not in cut_sets:
+                        cut_sets.append(suffix)
+            for cuts in cut_sets:
+                segs = []
+                lo = 0
+                for c in list(cuts) + [end]:
+                    segs.append(list(run[lo:c]))
+                    lo = c
+                seen_caps: set = set()
+                for k in k_choices:
+                    if k > min(max_k, h_final) or k < 2:
+                        continue
+                    for mr in min_rows_choices:
+                        for rd in rate_div_choices:
+                            caps = _cascade_caps(graph, segs, k, mr, rd)
+                            if caps in seen_caps:
+                                continue
+                            seen_caps.add(caps)
+                            est, frac, rings = estimate_cascade(
+                                graph, segs, k, mr, rd)
+                            if frac > overhead_cap:
+                                continue
+                            est = max(est, tail_floor)
+                            meets = budget is not None and est <= budget
+                            key = (0 if meets else 1, est, frac, k, mr, rd)
+                            if best is None or key < best[0]:
+                                best = (key, segs, k, est, frac, rings,
+                                        mr, rd)
+        if best is not None:
+            _, segs, k, est, frac, rings, mr, rd = best
+            cascades.append(Cascade(segs, k, rings, est, frac, mr, rd))
+    return cascades
+
+
+# ----------------------------------------------------------- ring rewriting
+def _ring_read_fn(lo: int, n: int, ring_rows: int) -> Callable[..., Any]:
+    def fn(ring, lo=lo, n=n, ring_rows=ring_rows):
+        ring = np.asarray(ring)
+        return ring[(lo + np.arange(n)) % ring_rows]
+    return fn
+
+
+def _ring_push_fn(dst: int, ring_rows: int, first: bool) -> Callable[..., Any]:
+    if first:
+        def fn(part, dst=dst, ring_rows=ring_rows):
+            part = np.asarray(part)
+            ring = np.zeros((ring_rows,) + part.shape[1:], part.dtype)
+            ring[(dst + np.arange(part.shape[0])) % ring_rows] = part
+            return ring
+    else:
+        def fn(ring, part, dst=dst, ring_rows=ring_rows):
+            out = np.array(np.asarray(ring))   # simulator copies; on-device
+            part = np.asarray(part)            # this is a rolling in-place
+            out[(dst + np.arange(part.shape[0])) % ring_rows] = part
+            return out
+    return fn
+
+
+def _emit_cascade(old: Graph, new: Graph, casc: Cascade) -> None:
+    segments, k = casc.segments, casc.k
+    m = len(segments)
+    head = segments[0][0].name
+    y = segments[-1][-1].output
+    ty = old.tensors[y]
+    members = casc.ops
+    executable = all(op.fn is not None for op in members) and all(
+        spec_of(op).make_fn is not None for op in members)  # type: ignore[union-attr]
+    slices, _ = cascade_slice_plans(old, segments, k, casc.min_rows,
+                                    casc.rate_div)
+
+    extracts: Dict[Tuple[str, int, int], str] = {}
+
+    def extract(inp: str, lo: int, hi: int, phase: int) -> str:
+        key = (inp, lo, hi)
+        if key not in extracts:
+            t_in = old.tensors[inp]
+            tname = f"{inp}__cpex_{head}_{lo}_{hi}"
+            shape = (hi - lo,) + tuple(t_in.shape[1:]) if t_in.shape else ()
+            new.add_tensor(tname, (hi - lo) * _row_bytes(old, inp), shape,
+                           t_in.dtype)
+            new.add_operator(f"cpexsl__{head}_{len(extracts)}", [inp], tname,
+                             kind="pex_slice",
+                             fn=_slice_fn(lo, hi) if executable else None,
+                             pex_seg=head, pex_slice_idx=phase,
+                             pex_rows=(lo, hi))
+            extracts[key] = tname
+        return extracts[key]
+
+    ring_cur: List[Optional[str]] = [None] * (m - 1)
+    acc_prev: Optional[str] = None
+    for s, cs in enumerate(slices):
+        # group index for the compiled executor's fori_loop rolling: with a
+        # rate divisor the steady-state structure repeats every rate_div
+        # iterations, so the whole super-period is one rollable group
+        phase = s // casc.rate_div
+        for i, seg in enumerate(segments):
+            d_lo, d_hi = cs.deltas[i]
+            if d_hi <= d_lo:
+                continue
+            plan = cs.plans[i]
+            assert plan is not None
+            for d, op in enumerate(seg):
+                spec = spec_of(op)
+                assert spec is not None
+                oa, ob = plan.out[op.name]
+                pads = (0, 0)
+                ins: List[str] = []
+                for idx, inp in enumerate(op.inputs):
+                    rp = plan.ins[op.name][idx]
+                    if rp is None:
+                        ins.append(inp)            # consumed whole
+                        continue
+                    lo, hi, top, bottom = rp
+                    if top or bottom:
+                        pads = (top, bottom)
+                    if d > 0 and inp == seg[d - 1].output:
+                        ins.append(f"{inp}__cpex{s}")
+                    elif (d == 0 and i > 0
+                          and inp == segments[i - 1][-1].output):
+                        # halo'd window out of the predecessor's ring
+                        ring = ring_cur[i - 1]
+                        assert ring is not None
+                        ring_rows = casc.ring_rows[i - 1]
+                        t_b = old.tensors[inp]
+                        rname = f"{inp}__rw{s}"
+                        shape = ((hi - lo,) + tuple(t_b.shape[1:])
+                                 if t_b.shape else ())
+                        new.add_tensor(rname,
+                                       (hi - lo) * _row_bytes(old, inp),
+                                       shape, t_b.dtype)
+                        new.add_operator(
+                            f"cpexrd__{head}_{i}_{s}", [ring], rname,
+                            kind="pex_ring_read",
+                            fn=(_ring_read_fn(lo, hi - lo, ring_rows)
+                                if executable else None),
+                            pex_seg=head, pex_slice_idx=phase,
+                            pex_ring_rows=ring_rows, pex_ring_src=lo)
+                        ins.append(rname)
+                    else:
+                        ins.append(extract(inp, lo, hi, phase))
+                t_out = old.tensors[op.output]
+                oname = f"{op.output}__cpex{s}"
+                shape = ((ob - oa,) + tuple(t_out.shape[1:])
+                         if t_out.shape else ())
+                new.add_tensor(oname, (ob - oa) * _row_bytes(old, op.output),
+                               shape, t_out.dtype)
+                attrs = {a: v for a, v in op.attrs.items() if a != PEX_ATTR}
+                attrs["pex_of"] = op.name
+                attrs["pex_seg"] = head
+                attrs["pex_slice_idx"] = phase
+                attrs["pex_pads"] = pads
+                fn = (spec.make_fn(op, pads[0], pads[1])
+                      if executable else None)   # type: ignore[misc]
+                new.add_operator(f"{op.name}__cpex{s}", ins, oname,
+                                 kind=op.kind, fn=fn, **attrs)
+            part = f"{seg[-1].output}__cpex{s}"
+            if i < m - 1:
+                # rolling push of the delta rows into this boundary's ring
+                boundary = seg[-1].output
+                ring_rows = casc.ring_rows[i]
+                t_b = old.tensors[boundary]
+                ring_name = f"{boundary}__ring{s}"
+                shape = ((ring_rows,) + tuple(t_b.shape[1:])
+                         if t_b.shape else ())
+                new.add_tensor(ring_name,
+                               ring_rows * _row_bytes(old, boundary),
+                               shape, t_b.dtype)
+                first = ring_cur[i] is None
+                if first:
+                    new.add_operator(
+                        f"cpexpu__{head}_{i}_{s}", [part], ring_name,
+                        kind="pex_ring_push",
+                        fn=(_ring_push_fn(d_lo, ring_rows, True)
+                            if executable else None),
+                        pex_seg=head, pex_slice_idx=phase,
+                        pex_ring_rows=ring_rows, pex_ring_dst=d_lo,
+                        pex_first=True)
+                else:
+                    new.add_operator(
+                        f"cpexpu__{head}_{i}_{s}", [ring_cur[i], part],
+                        ring_name, kind="pex_ring_push",
+                        fn=(_ring_push_fn(d_lo, ring_rows, False)
+                            if executable else None),
+                        inplace=True, inplace_input=ring_cur[i],
+                        pex_seg=head, pex_slice_idx=phase,
+                        pex_ring_rows=ring_rows, pex_ring_dst=d_lo,
+                        pex_first=False)
+                ring_cur[i] = ring_name
+            else:
+                start = d_lo
+                last = s == len(slices) - 1   # final delta ends the output
+                out_name = y if last else f"{y}__cpexacc{s}"
+                if not last:
+                    new.add_tensor(out_name, ty.size, ty.shape, ty.dtype)
+                if acc_prev is None:
+                    new.add_operator(f"cpexcat__{head}_{s}", [part],
+                                     out_name, kind="pex_concat",
+                                     fn=(_concat_fn(start, tuple(ty.shape),
+                                                    True)
+                                         if executable else None),
+                                     pex_seg=head, pex_slice_idx=phase,
+                                     pex_start=start, pex_first=True)
+                else:
+                    new.add_operator(f"cpexcat__{head}_{s}",
+                                     [acc_prev, part], out_name,
+                                     kind="pex_concat",
+                                     fn=(_concat_fn(start, tuple(ty.shape),
+                                                    False)
+                                         if executable else None),
+                                     inplace=True, inplace_input=acc_prev,
+                                     pex_seg=head, pex_slice_idx=phase,
+                                     pex_start=start, pex_first=False)
+                acc_prev = out_name
+
+
+@dataclasses.dataclass
+class CascadeResult:
+    graph: Graph
+    cascades: List[Cascade]
+
+    @property
+    def extra_macs_frac(self) -> float:
+        """Halo recompute overhead, worst cascade."""
+        return max((c.extra_macs_frac for c in self.cascades), default=0.0)
+
+    def __str__(self) -> str:
+        return (f"cascade: {len(self.cascades)} cascades, "
+                f"{sum(len(c.segments) for c in self.cascades)} segments, "
+                f"halo overhead <= {self.extra_macs_frac:.1%}")
+
+
+def apply_cascade(graph: Graph, cascades: Sequence[Cascade]) -> Graph:
+    """Rewrite ``graph`` with every cascade streamed through ring buffers.
+    Insertion order is the interleaved cascade execution order (slice 0
+    through every segment, slice 1 through every segment, ...), so
+    ``default_schedule`` of the result is already streaming-shaped."""
+    heads = {c.segments[0][0].name: c for c in cascades}
+    member = {op.name for c in cascades for op in c.ops}
+    interior = {op.output for c in cascades for op in c.ops
+                if op.output != c.segments[-1][-1].output}
+    new = Graph()
+    for name, t in graph.tensors.items():
+        if name not in interior:
+            new.add_tensor(name, t.size, t.shape, t.dtype)
+    for op in graph.operators:
+        if op.name in heads:
+            _emit_cascade(graph, new, heads[op.name])
+        elif op.name in member:
+            continue
+        else:
+            new.add_operator(op.name, list(op.inputs), op.output,
+                             kind=op.kind, fn=op.fn, **op.attrs)
+    new.set_outputs(graph.outputs)
+    return new
+
+
+def cascade_graph(graph: Graph, budget: Optional[int] = None,
+                  max_k: int = 16, overhead_cap: float = 0.25,
+                  k_choices: Sequence[int] = (2, 3, 4, 6, 8, 12, 16)
+                  ) -> CascadeResult:
+    """One-stop cascaded-streaming transform: plan cut sets / K against
+    ``budget`` and rewrite the graph.  Returns the input graph unchanged
+    (``result.graph is graph``) when no run can cascade."""
+    cascades = plan_cascade(graph, budget, max_k, overhead_cap, k_choices)
+    if not cascades:
+        return CascadeResult(graph, [])
+    return CascadeResult(apply_cascade(graph, cascades), cascades)

@@ -26,6 +26,12 @@ class ScheduleResult:
     # When a partial-execution pre-pass rewrote the graph, the schedule's
     # operators belong to this graph (None = the graph passed by the caller).
     graph: Optional["Graph"] = None
+    # Halo-recompute cost of a partial-execution/cascade rewrite: extra
+    # MACs as a fraction of the *worst rewritten region's* own MACs
+    # (0.0 = whole-operator schedule).  Regions are disjoint operator
+    # sets, so this is also an upper bound on the model-wide extra-MACs
+    # fraction — the latency price paid for the memory saving.
+    extra_macs_frac: float = 0.0
 
 
 def _split(graph: Graph, x_set: FrozenSet[str]) -> Tuple[List[str], List[str]]:

@@ -167,6 +167,40 @@ def _lower_pex_concat(ctx: LoweringCtx, op: Operator, *args):
     return lax.dynamic_update_slice(acc, part, idx)
 
 
+# Cascaded-streaming ring ops (core/partition.py cascade rewrite): boundary
+# tensors between cascaded segments never exist whole — row ``r`` of the
+# boundary lives at ring position ``r % ring_rows``.  A push is a rolling
+# scatter of the producer's new delta rows (the SSA chain of ring states
+# aliases to one arena offset through the inplace accounting, so the
+# compiled read-modify-write at that offset IS the rolling buffer); a read
+# gathers the consumer's halo'd window back into row order.  Both are pure
+# row copies at static indices — bit-identity is structural.
+@register_lowering("pex_ring_push")
+def _lower_pex_ring_push(ctx: LoweringCtx, op: Operator, *args):
+    a = op.attrs
+    rows, dst = a.get("pex_ring_rows"), a.get("pex_ring_dst")
+    if rows is None or dst is None:
+        return _fallback(ctx, op, *args)
+    if a.get("pex_first"):
+        (part,) = args
+        ring = jnp.zeros(ctx.shape(op.output), part.dtype)
+    else:
+        ring, part = args
+    idx = (dst + jnp.arange(part.shape[0])) % rows
+    return ring.at[idx].set(part)
+
+
+@register_lowering("pex_ring_read")
+def _lower_pex_ring_read(ctx: LoweringCtx, op: Operator, ring):
+    a = op.attrs
+    rows, src = a.get("pex_ring_rows"), a.get("pex_ring_src")
+    if rows is None or src is None:
+        return _fallback(ctx, op, ring)
+    n = ctx.shape(op.output)[0]
+    idx = (src + jnp.arange(n)) % rows
+    return jnp.take(ring, idx, axis=0)
+
+
 # ------------------------------------------------------- pex fori_loop rolling
 def _roll_key(ctx: LoweringCtx, op: Operator):
     """Hashable description of what an op *computes* (not where its tensors
@@ -185,6 +219,15 @@ def _roll_key(ctx: LoweringCtx, op: Operator):
         if "pex_start" not in a:
             return None
         return ("pex_concat", bool(a.get("pex_first")), ins, outs)
+    if op.kind == "pex_ring_push":
+        if "pex_ring_dst" not in a:
+            return None
+        return ("pex_ring_push", bool(a.get("pex_first")),
+                a["pex_ring_rows"], ins, outs)
+    if op.kind == "pex_ring_read":
+        if "pex_ring_src" not in a:
+            return None
+        return ("pex_ring_read", a["pex_ring_rows"], ins, outs)
     if "pex_of" in a and "pex_pads" in a:
         return (op.kind, a["pex_of"], tuple(a["pex_pads"]), ins, outs)
     return None
@@ -210,7 +253,10 @@ class _Template:
     in_slots: List[_Slot]
     out_slot: _Slot
     lo: Optional[Any] = None           # pex_slice: row start per iteration
-    start: Optional[Any] = None        # pex_concat: write start per iteration
+    start: Optional[Any] = None       # pex_concat: write start per iteration
+    ring_dst: Optional[Any] = None    # pex_ring_push: dst row per iteration
+    ring_src: Optional[Any] = None    # pex_ring_read: src row per iteration
+    ring_rows: int = 0                # ring size (rows); static per template
 
 
 @dataclasses.dataclass
@@ -274,6 +320,14 @@ def _build_loop(ctx: LoweringCtx, offsets: Dict[str, Tuple[int, int]],
         elif rep.kind == "pex_concat":
             tpl.start = jnp.asarray([o.attrs["pex_start"] for o in ops],
                                     jnp.int32)
+        elif rep.kind == "pex_ring_push":
+            tpl.ring_dst = jnp.asarray([o.attrs["pex_ring_dst"]
+                                        for o in ops], jnp.int32)
+            tpl.ring_rows = rep.attrs["pex_ring_rows"]
+        elif rep.kind == "pex_ring_read":
+            tpl.ring_src = jnp.asarray([o.attrs["pex_ring_src"]
+                                        for o in ops], jnp.int32)
+            tpl.ring_rows = rep.attrs["pex_ring_rows"]
         templates.append(tpl)
     return _RolledLoop(templates, n)
 
@@ -479,6 +533,21 @@ def compile_schedule(graph: Graph,
                     acc, part = args
                     idx = (tpl.start[i],) + (0,) * (part.ndim - 1)
                     out = lax.dynamic_update_slice(acc, part, idx)
+                elif tpl.ring_dst is not None:    # pex_ring_push, dyn. dst
+                    if op.attrs.get("pex_first"):
+                        (part,) = args
+                        ring = jnp.zeros(tpl.out_slot.shape, part.dtype)
+                    else:
+                        ring, part = args
+                    rows = (tpl.ring_dst[i]
+                            + jnp.arange(part.shape[0])) % tpl.ring_rows
+                    out = ring.at[rows].set(part)
+                elif tpl.ring_src is not None:    # pex_ring_read, dyn. src
+                    (ring,) = args
+                    rows = (tpl.ring_src[i]
+                            + jnp.arange(tpl.out_slot.shape[0])
+                            ) % tpl.ring_rows
+                    out = jnp.take(ring, rows, axis=0)
                 else:
                     out = lower_op(ctx, op, *args)
                 want = jnp.dtype(_JNP_DTYPES[tpl.out_slot.dtype])

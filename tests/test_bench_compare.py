@@ -84,3 +84,36 @@ def test_baseline_byte_rows_match_current_scheduling():
 
     rows, _ = load_rows(str(BASELINE))
     assert rows["figure1.optimal_peak_B"]["arena_bytes"] == schedule(figure1_graph()).peak == 4960
+
+
+# ----------------------------------------------------- baseline regeneration
+def test_update_baseline_envelope_merge():
+    """run.py --update-baseline semantics: max-us envelope, exact bytes,
+    new rows appended, rows not re-run kept."""
+    from benchmarks.run import merge_baseline
+
+    base = {"rows": [_row("a", us=100.0, arena=4096),
+                     _row("kept", us=5.0, arena=64)]}
+    notes = merge_baseline(
+        base, [_row("a", us=80.0, arena=4000), _row("new", us=7.0, arena=8)])
+    rows = _index(base["rows"])
+    assert rows["a"]["us_per_call"] == 100.0      # envelope: max of runs
+    assert rows["a"]["arena_bytes"] == 4000       # bytes: exact, may shrink
+    assert rows["kept"]["us_per_call"] == 5.0     # not re-run: untouched
+    assert rows["new"]["arena_bytes"] == 8
+    assert any("new row new" in n for n in notes)
+
+
+def test_update_baseline_refuses_bytes_growth():
+    import pytest
+
+    from benchmarks.run import merge_baseline
+
+    base = {"rows": [_row("a", us=100.0, arena=4096)]}
+    with pytest.raises(SystemExit, match="refusing to loosen"):
+        merge_baseline(base, [_row("a", us=80.0, arena=5000)])
+    # the escape hatch is explicit
+    notes = merge_baseline(base, [_row("a", us=80.0, arena=5000)],
+                           allow_bytes_growth=True)
+    assert _index(base["rows"])["a"]["arena_bytes"] == 5000
+    assert any("--allow-bytes-growth" in n for n in notes)

@@ -1,0 +1,251 @@
+"""Cascaded Pex streaming: ring-buffer inter-segment execution.
+
+The cascade rewrite (``core/partition.py``) chains adjacent sliceable
+segments through ring buffers so no inter-segment tensor ever exists
+whole.  These tests pin the contract end to end:
+
+* the rewritten graph evaluates **bit-identically** to the original
+  through the micro-interpreter (both allocators) and the compiled arena
+  executor (rolled and unrolled);
+* the memory model triple-agrees: dynamic-interpreter peak ==
+  liveness-model peak == ``plan.arena_size`` (ring pushes are inplace
+  rolling writes, so the existing accounting prices them);
+* the golden headline: MobileNet-1.0@192 int8 + reorder + cascade fits a
+  256 KB arena (the ROADMAP "cascaded Pex streaming" item), strictly
+  below the whole-externals Pex floor, at <= 25% extra MACs.
+
+Numerics contract (same caveat as ``jaxpr_partial``'s sliced
+dot_general): the int8 path is **bit-identical** — int32 accumulation and
+round-half-even requantization are exact, so streaming cannot drift — and
+it is the deployment path the golden pins.  The f32 path is bit-identical
+*per shape* (compiled executor vs interpreter on the same cascaded
+graph), but XLA CPU's conv algorithm is not bit-stable across input
+heights at larger channel counts, so f32 cascade outputs are compared to
+the unsliced graph within accumulation tolerance.
+
+The hypothesis property (random sliceable chains) runs when hypothesis
+is installed; a fixed-seed sweep of the same property always runs.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import ArenaPlanner, Graph, cascade_graph, partition_graph, schedule
+from repro.graphs import (int8_scheduling_graph, mobilenet_v1_graph,
+                          quantize_graph, random_input)
+from repro.graphs.cnn_ops import CNNBuilder
+from repro.mcu import MicroInterpreter, compile_schedule
+
+KB = 1024
+
+
+def random_chain_graph(seed: int, h: int = 24) -> Graph:
+    """A random sliceable chain: conv/dwconv/maxpool at mixed strides —
+    the cascade planner's element (cascades live inside chains)."""
+    rng = random.Random(seed)
+    g = Graph()
+    b = CNNBuilder(g)
+    x = b.input("input", h, h, rng.choice([3, 4]))
+    for _ in range(rng.randint(3, 7)):
+        r = rng.random()
+        if r < 0.4:
+            x = b.conv(x, rng.choice([4, 8, 16]), k=rng.choice([1, 3]),
+                       stride=rng.choice([1, 1, 2]))
+        elif r < 0.8:
+            x = b.dwconv(x, k=3, stride=rng.choice([1, 1, 2]))
+        else:
+            x = b.maxpool(x, k=2, stride=2)
+        if b.shapes[x][0] < 4:
+            break
+    x = b.avgpool(x)
+    x = b.fc(x, 4)
+    g.set_outputs([x])
+    return g
+
+
+def _inputs(g, seed=0):
+    h, w, c = g.tensors["input"].shape
+    rng = np.random.default_rng(seed)
+    return {"input": rng.standard_normal((h, w, c)).astype(np.float32)}
+
+
+def _triple_agreement(g, gp, sched, x, exact_arena=True):
+    """dynamic peak == liveness peak == plan arena, outputs bit-identical
+    to the original graph across both interpreter allocators.
+
+    ``exact_arena=False`` relaxes the last leg to ``arena >= liveness``:
+    best-fit placement can fragment a few bytes above the liveness floor
+    on irregular random chains (the structured golden models pin exact
+    equality)."""
+    plan = ArenaPlanner.plan(gp, sched)
+    ArenaPlanner.validate(plan, gp)
+    ref = MicroInterpreter(g).run(x)
+    dyn = MicroInterpreter(gp).run(x, schedule=sched)
+    pln = MicroInterpreter(gp).run(x, schedule=sched, plan=plan)
+    for o in g.outputs:
+        if np.asarray(ref.outputs[o]).dtype == np.int8:
+            np.testing.assert_array_equal(ref.outputs[o], dyn.outputs[o])
+        else:     # f32: XLA conv is not bit-stable across input heights
+            np.testing.assert_allclose(ref.outputs[o], dyn.outputs[o],
+                                       rtol=2e-6, atol=1e-7)
+        # both interpreter allocators agree exactly (same shapes)
+        np.testing.assert_array_equal(dyn.outputs[o], pln.outputs[o])
+    live_peak = gp.peak_usage(sched)
+    assert dyn.peak_sram == live_peak, (dyn.peak_sram, live_peak)
+    if exact_arena:
+        assert plan.arena_size == live_peak, (plan.arena_size, live_peak)
+    else:
+        assert plan.arena_size >= live_peak
+    return plan
+
+
+# --------------------------------------------------------------- bit-identity
+def test_cascade_f32_memory_model_and_numerics():
+    g = mobilenet_v1_graph()                      # 0.25 @ 96, executable
+    base = schedule(g)
+    cr = cascade_graph(g, budget=int(base.peak * 0.5))
+    assert cr.cascades, "mobilenet chain must cascade"
+    assert cr.extra_macs_frac <= 0.25
+    gp = cr.graph
+    sched = gp.default_schedule()                 # insertion order = stream
+    x = _inputs(g)
+    plan = _triple_agreement(g, gp, sched, x)
+    assert plan.arena_size < base.peak
+    # ring states alias to one buffer through the inplace chain
+    ring_places = [p for p in plan.placements if "__ring" in p.tensor]
+    assert ring_places
+    by_alias = {}
+    for p in ring_places:
+        assert p.alias is not None
+        by_alias.setdefault(p.alias, set()).add(p.offset)
+    assert all(len(offs) == 1 for offs in by_alias.values())
+
+
+def test_cascade_int8_compiled_bit_identical_rolled_and_unrolled():
+    """Quantized cascade: zero-point SAME padding and per-tensor requant
+    must survive ring streaming bit-for-bit — through both interpreter
+    allocators and the compiled byte-arena executor, with the rolled
+    fori_loop form agreeing with the unrolled one."""
+    g = mobilenet_v1_graph()
+    qm = quantize_graph(g, random_input(g))
+    q = qm.graph
+    base = schedule(q)
+    cr = cascade_graph(q, budget=int(base.peak * 0.5))
+    assert cr.cascades
+    gp = cr.graph
+    sched = gp.default_schedule()
+    x = qm.quantize_inputs(random_input(g))
+    plan = _triple_agreement(q, gp, sched, x)
+    ex = compile_schedule(gp, sched, plan)
+    assert ex.rolled_loops > 0, "steady-state iterations must roll"
+    assert ex.arena_size == plan.arena_size
+    out = ex.run(x)
+    out_u = compile_schedule(gp, sched, plan, roll_loops=False).run(x)
+    ref = MicroInterpreter(q).run(x)
+    for o in q.outputs:
+        np.testing.assert_array_equal(ref.outputs[o], out[o])
+        np.testing.assert_array_equal(out[o], out_u[o])
+        assert out[o].dtype == np.int8
+
+
+# ------------------------------------------------------------------ scheduler
+def test_schedule_escalates_to_cascade_only_when_needed():
+    g = mobilenet_v1_graph()
+    base = schedule(g)
+    # a budget whole-externals pex meets (same budget test_partition pins):
+    # no cascade — the escalation must not fire when pex suffices
+    pex = schedule(g, arena_budget=int(base.peak * 0.9))
+    assert pex.peak <= int(base.peak * 0.9)
+    assert "cascade" not in pex.method
+    # a budget pex cannot meet: cascade fires and beats pex's peak
+    tight = int(pex.peak * 0.6)
+    res = schedule(g, arena_budget=tight)
+    assert "cascade" in res.method
+    assert res.peak < pex.peak
+
+
+# ------------------------------------------------------ golden (fast tier)
+def test_golden_mobilenet_100_192_cascade_fits_256K():
+    """THE ROADMAP item: cascaded Pex streaming breaks the ~280 KB
+    whole-externals floor on MobileNet-1.0@192 int8 — a <= 256 KB arena,
+    strictly below the whole-externals Pex result, at <= 25% extra MACs.
+    Scheduling-only (int8_scheduling_graph reproduces the quantized
+    model's exact byte sizes); the executable golden is the slow-tier
+    test below."""
+    q = int8_scheduling_graph(mobilenet_v1_graph(alpha=1.0, resolution=192))
+    res = schedule(q, arena_budget=256 * KB)
+    assert "cascade" in res.method
+    assert 0.0 < res.extra_macs_frac <= 0.25
+    gp = res.graph
+    assert gp is not None
+    plan = ArenaPlanner.plan(gp, res.schedule)
+    ArenaPlanner.validate(plan, gp)
+    assert res.peak <= 256 * KB
+    assert plan.arena_size <= 256 * KB
+    assert plan.arena_size == gp.peak_usage(res.schedule)
+    # strictly below the ~280 KB whole-externals floor (and a fortiori the
+    # 315 KB whole-externals arena test_golden pins at the 512 KB budget)
+    assert plan.arena_size < 280 * KB
+
+
+@pytest.mark.slow
+def test_golden_mobilenet_100_192_cascade_executable():
+    """The executable form of the golden: real int8 weights, compiled
+    byte-arena executor, bit-identical to the MicroInterpreter under both
+    allocators, inside 256 KB."""
+    g = mobilenet_v1_graph(alpha=1.0, resolution=192)
+    qm = quantize_graph(g, random_input(g))
+    q = qm.graph
+    res = schedule(q, arena_budget=256 * KB)
+    assert "cascade" in res.method and res.graph is not None
+    gp = res.graph
+    x = qm.quantize_inputs(random_input(g))
+    plan = _triple_agreement(q, gp, res.schedule, x)
+    assert plan.arena_size <= 256 * KB
+    ex = compile_schedule(gp, res.schedule, plan)
+    out = ex.run(x)
+    ref = MicroInterpreter(q).run(x)
+    for o in q.outputs:
+        np.testing.assert_array_equal(ref.outputs[o], out[o])
+
+
+# ------------------------------------------------- ring liveness property
+def _ring_liveness_property(seed: int) -> bool:
+    """The satellite property on one random chain: cascade triple
+    agreement (dynamic peak == liveness peak, arena validated against
+    both) + the budget escalation never loses to whole-externals Pex
+    alone (cascades are only selected when they win; on tiny chains pex
+    can beat the rings' overhead and must then be kept).  Returns True
+    when the seed produced a cascade."""
+    g = random_chain_graph(seed)
+    base = schedule(g)
+    budget = int(base.peak * 0.6)
+    cr = cascade_graph(g, budget=budget)
+    if not cr.cascades:
+        return False
+    gp = cr.graph
+    sched = gp.default_schedule()
+    x = _inputs(g, seed)
+    _triple_agreement(g, gp, sched, x, exact_arena=False)
+    res = schedule(g, arena_budget=budget)
+    assert res.peak <= base.peak
+    pr = partition_graph(g, budget=budget)
+    if pr.segments:
+        pex_peak = pr.graph.peak_usage(pr.graph.default_schedule())
+        assert res.peak <= pex_peak, (res.peak, pex_peak)
+    return True
+
+
+def test_ring_liveness_fixed_seeds():
+    cascaded = sum(_ring_liveness_property(seed) for seed in range(8))
+    assert cascaded >= 2, "generator produced too few cascadable chains"
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=8, deadline=None)    # each example runs a planner +
+@given(st.integers(min_value=0, max_value=10_000))   # 3 interpreter passes
+def test_ring_liveness_hypothesis(seed):
+    _ring_liveness_property(seed)

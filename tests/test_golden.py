@@ -40,10 +40,9 @@ def test_mobilenet_100_192_headline():
     partial execution reaches 315 KB — inside a 512 KB MCU arena that no
     other single technique here gets near.
 
-    (A <=256 KB arena for this model is NOT reachable with the current
-    segment model: any front segment must hold the whole 108 KB input plus
-    a >=144 KB accumulator plus slice working set, floor ~280 KB — see
-    ROADMAP "cascaded Pex streaming".)
+    (A <=256 KB arena is out of reach of the whole-externals segment
+    model — the ~280 KB input+accumulator floor — but cascaded Pex
+    streaming breaks it: see test_cascade.py's 243 KB golden.)
     """
     g = mobilenet_v1_graph(alpha=1.0, resolution=192)
     assert schedule(g).peak == 3456 * KB     # f32 reorder-only floor
