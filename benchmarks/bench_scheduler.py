@@ -1,12 +1,25 @@
-"""Scheduler scaling: exact DP vs chain-contracted DP vs greedy vs beam —
-runtime and solution quality over random branchy DAGs (the paper reports
-O(|V|·2^|V|); this quantifies where each method stays tractable)."""
+"""Scheduler scaling: exact DP vs chain-contracted DP vs greedy vs beam vs
+the joint branch-and-bound solver — runtime and solution quality over
+random branchy DAGs (the paper reports O(|V|·2^|V|); this quantifies where
+each method stays tractable), plus the solver's Pareto front on a
+sliceable chain (the row the CI gate pins point-by-point).
+
+Smoke mode (``run.py --smoke`` / ``REPRO_BENCH_SMOKE=1``) keeps the small
+sizes only, so the CI leg stays fast while the full run still sweeps the
+tractability cliff.
+"""
+import os
 import random
 import time
 
 from repro.core import (beam_schedule, greedy_schedule, minimise_peak_memory,
-                        minimise_peak_memory_contracted)
+                        minimise_peak_memory_contracted, schedule, solve)
 from repro.core.graph import Graph
+from repro.core.partition import PEX_ATTR, SliceSpec
+
+
+def _smoke() -> bool:
+    return bool(os.environ.get("REPRO_BENCH_SMOKE"))
 
 
 def random_branchy(seed, n_ops, fanout=0.3):
@@ -28,14 +41,36 @@ def random_branchy(seed, n_ops, fanout=0.3):
     return g
 
 
+def pareto_chain(n_ops=6, h=64, row_bytes=(64, 256, 256, 192, 256, 128, 64)):
+    """A deterministic sliceable conv-ish chain with a fat interior: the
+    joint solver's showcase graph (slicing the middle trades recompute
+    MACs for peak bytes, so the front has several points)."""
+    g = Graph()
+    g.add_tensor("in", h * row_bytes[0], shape=(h,))
+    prev = "in"
+    for i in range(n_ops):
+        out = f"t{i}"
+        g.add_tensor(out, h * row_bytes[i + 1], shape=(h,))
+        op = g.add_operator(f"op{i}", [prev], out)
+        op.attrs[PEX_ATTR] = SliceSpec(kernel=3, stride=1,
+                                       sliced_inputs=(0,),
+                                       macs_per_row=row_bytes[i + 1])
+        prev = out
+    g.set_outputs([prev])
+    return g
+
+
 def run(report):
-    for n in (8, 12, 16, 20):
+    exact_sizes = (8, 12) if _smoke() else (8, 12, 16, 20)
+    for n in exact_sizes:
         g = random_branchy(42, n)
         t0 = time.perf_counter()
         exact = minimise_peak_memory(g)
         t_exact = (time.perf_counter() - t0) * 1e6
         report(f"scheduler.exact.n{n}", t_exact, exact.peak)
-    for n in (16, 32, 64, 128):
+
+    heur_sizes = (16, 32) if _smoke() else (16, 32, 64, 128)
+    for n in heur_sizes:
         g = random_branchy(42, n)
         ub = greedy_schedule(g).peak + 1
         t0 = time.perf_counter()
@@ -52,3 +87,29 @@ def run(report):
         bm = beam_schedule(g, width=32)
         report(f"scheduler.beam32.n{n}",
                (time.perf_counter() - t0) * 1e6, bm.peak)
+
+    # ---- solver vs ladder: same graphs, wall-clock + node counts --------
+    solver_sizes = (8, 12) if _smoke() else (8, 12, 16, 20)
+    for n in solver_sizes:
+        g = random_branchy(42, n)
+        t0 = time.perf_counter()
+        lad = schedule(g, solver_nodes=0)    # the pre-solver ladder alone
+        report(f"scheduler.ladder.n{n}",
+               (time.perf_counter() - t0) * 1e6, lad.peak)
+        t0 = time.perf_counter()
+        sr = solve(g, max_rewrites=0, max_nodes=50_000)
+        report(f"scheduler.solver.n{n}",
+               (time.perf_counter() - t0) * 1e6, sr.best.peak,
+               nodes=sr.nodes)
+        # the rung contract the property suite also pins: never worse
+        assert sr.best.peak <= lad.peak or not sr.complete
+
+    # ---- the Pareto showcase: joint order x split search on a chain -----
+    g = pareto_chain()
+    t0 = time.perf_counter()
+    sr = solve(g, max_k=8, max_nodes=50_000)
+    us = (time.perf_counter() - t0) * 1e6
+    front = [[p.extra_macs, p.peak] for p in sr.front]
+    report("scheduler.pareto.chain", us, sr.best.peak,
+           arena_bytes=sr.best.peak, dtypes="int8",
+           pareto=front, nodes=sr.nodes)

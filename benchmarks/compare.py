@@ -2,15 +2,24 @@
 against the committed baseline and FAIL the workflow when the memory story
 regresses.
 
-Two gates, per row name present in both files:
+Three gates, per row name present in both files:
 
 * **bytes (exact, strict)** — ``arena_bytes`` may never grow.  Arena/peak
   sizes are deterministic scheduling artefacts, so any growth is a real
-  cost-model/scheduler/planner regression, never noise.
+  cost-model/scheduler/planner regression, never noise.  A fresh row that
+  *loses* its byte figure (baseline has one, fresh is null) also fails:
+  that silently disarms the gate.
 * **time (tolerant)** — ``us_per_call`` may not regress more than
   ``--us-tol`` (default 20%) plus an absolute ``--us-slack`` grace
   (default 5000 us) that absorbs shared-runner jitter on sub-millisecond
   rows.
+* **Pareto (exact, strict)** — rows carrying a ``pareto`` front (a sorted
+  list of ``[extra_macs, peak_bytes]`` pairs from the joint solver) must
+  *cover* the baseline front: every baseline point must be matched or
+  dominated (<= on both axes) by some fresh point.  Fronts are
+  deterministic solver artefacts like the byte rows; an uncovered point
+  means a real scheduling-quality regression.  Losing the front entirely
+  fails; a new front on a row the baseline has no front for is a note.
 
 A baseline row missing from the fresh run is a coverage regression and
 fails; new rows are reported and pass (they enter the gate when the
@@ -39,6 +48,19 @@ def load_rows(path: str) -> Tuple[Dict[str, dict], dict]:
     return {r["name"]: r for r in payload["rows"]}, payload
 
 
+def front_covers(base_front, fresh_front) -> List[Tuple[int, int]]:
+    """The baseline points NOT matched-or-dominated by any fresh point.
+
+    Fronts are ``[extra_macs, peak_bytes]`` pairs.  A fresh point covers a
+    baseline point when it is at least as good on both axes — the fresh
+    front may move, but every baseline trade-off must stay achievable."""
+    uncovered = []
+    for be, bp in base_front:
+        if not any(fe <= be and fp <= bp for fe, fp in fresh_front):
+            uncovered.append((be, bp))
+    return uncovered
+
+
 def compare_rows(
     base: Dict[str, dict],
     fresh: Dict[str, dict],
@@ -54,8 +76,25 @@ def compare_rows(
             failures.append(f"{name}: row missing from the fresh run (coverage regressed)")
             continue
         bb, fb = b.get("arena_bytes"), f.get("arena_bytes")
+        if bb is not None and fb is None:
+            failures.append(
+                f"{name}: arena_bytes lost (baseline has {bb}, fresh has none — "
+                f"the bytes gate would be silently disarmed)"
+            )
         if bb is not None and fb is not None and fb > bb:
             failures.append(f"{name}: arena/peak bytes grew {bb} -> {fb} (+{fb - bb} B)")
+        bf, ff = b.get("pareto"), f.get("pareto")
+        if bf:
+            if not ff:
+                failures.append(f"{name}: Pareto front lost (baseline has {len(bf)} points)")
+            else:
+                for be, bp in front_covers(bf, ff):
+                    failures.append(
+                        f"{name}: Pareto point (extra_macs={be}, peak={bp} B) "
+                        f"no longer matched or dominated"
+                    )
+        elif ff:
+            notes.append(f"{name}: new Pareto front ({len(ff)} points, not in baseline yet)")
         bus, fus = b.get("us_per_call"), f.get("us_per_call")
         if bus is not None and fus is not None:
             limit = bus * (1.0 + us_tol) + us_slack

@@ -19,9 +19,12 @@
 #
 # Benchmarks call ``report(name, us_per_call, derived, **meta)``; the
 # recognised meta keys are ``arena_bytes`` (peak/arena BYTES — the unit is
-# part of the trajectory contract since the byte-granular dtype refactor)
-# and ``dtypes`` ("float32" / "int8" / "mixed"), so the trajectory stays
-# comparable across quantization changes.
+# part of the trajectory contract since the byte-granular dtype refactor),
+# ``dtypes`` ("float32" / "int8" / "mixed"), ``pareto`` (the joint
+# solver's memory/latency front as sorted [extra_macs, peak_bytes] pairs
+# — gated point-by-point by compare.py), and ``nodes`` (solver search
+# nodes, informational).  ``--pareto-json PATH`` additionally collects
+# every reported front into one artifact for the CI upload / README link.
 import argparse
 import json
 import os
@@ -47,6 +50,26 @@ def merge_baseline(baseline: dict, fresh_rows: list,
             baseline["rows"].append(by_name[row["name"]])
             notes.append(f"new row {row['name']}")
             continue
+        of, nf = old.get("pareto"), row.get("pareto")
+        if of:
+            if not nf:
+                # same reasoning as the arena_bytes guard below: a merge
+                # must not silently disarm the compare.py Pareto gate
+                raise SystemExit(
+                    f"refusing to merge: {row['name']} lost its pareto "
+                    f"front (baseline has {len(of)} points); fix the "
+                    f"benchmark row before refreshing the baseline")
+            from .compare import front_covers
+            uncovered = front_covers(of, nf)
+            if uncovered and not allow_bytes_growth:
+                raise SystemExit(
+                    f"refusing to loosen baseline: {row['name']} pareto "
+                    f"points {uncovered} no longer matched or dominated; "
+                    f"pass --allow-bytes-growth if this regression is "
+                    f"deliberate")
+            if [list(p) for p in of] != [list(p) for p in nf]:
+                notes.append(f"{row['name']}: pareto front "
+                             f"{len(of)} -> {len(nf)} points")
         ob, nb = old.get("arena_bytes"), row.get("arena_bytes")
         if ob is not None and nb is None:
             # a fresh row without bytes (e.g. the -1 budget-exhausted
@@ -86,6 +109,10 @@ def main(argv=None) -> None:
                          "kernels,roofline)")
     ap.add_argument("--smoke", action="store_true",
                     help="restrict benchmarks to their small-graph subsets")
+    ap.add_argument("--pareto-json", metavar="PATH", default=None,
+                    help="collect every reported Pareto front (joint "
+                         "solver memory/latency trade-offs) into one "
+                         "JSON artifact at PATH")
     ap.add_argument("--update-baseline", metavar="PATH", nargs="?",
                     const=DEFAULT_BASELINE, default=None,
                     help="envelope-merge this run into the committed "
@@ -135,23 +162,32 @@ def main(argv=None) -> None:
             traceback.print_exc()
             failed.append(mod.__name__)
 
-    json_rows = [{
-        "name": name,
-        "us_per_call": us,
-        "derived": derived if isinstance(derived, (int, float, str,
-                                                   bool)) else
-        repr(derived),
-        # fallback: an int `derived` is a byte figure on legacy
-        # rows — but only when non-negative (benchmarks use -1 as
-        # a "budget exhausted" sentinel, which must not enter the
-        # strict bytes gate)
-        "arena_bytes": meta.get(
-            "arena_bytes",
-            derived if isinstance(derived, int)
-            and not isinstance(derived, bool)
-            and derived >= 0 else None),
-        "dtypes": meta.get("dtypes"),
-    } for name, us, derived, meta in rows]
+    json_rows = []
+    for name, us, derived, meta in rows:
+        jr = {
+            "name": name,
+            "us_per_call": us,
+            "derived": derived if isinstance(derived, (int, float, str,
+                                                       bool)) else
+            repr(derived),
+            # fallback: an int `derived` is a byte figure on legacy
+            # rows — but only when non-negative (benchmarks use -1 as
+            # a "budget exhausted" sentinel, which must not enter the
+            # strict bytes gate)
+            "arena_bytes": meta.get(
+                "arena_bytes",
+                derived if isinstance(derived, int)
+                and not isinstance(derived, bool)
+                and derived >= 0 else None),
+            "dtypes": meta.get("dtypes"),
+        }
+        # solver metadata, only on rows that carry it (keeps the committed
+        # baseline free of null noise)
+        if meta.get("pareto") is not None:
+            jr["pareto"] = [list(p) for p in meta["pareto"]]
+        if meta.get("nodes") is not None:
+            jr["nodes"] = meta["nodes"]
+        json_rows.append(jr)
 
     if args.json:
         payload = {
@@ -164,6 +200,16 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {len(rows)} rows to {args.json}")
+
+    if args.pareto_json:
+        fronts = {r["name"]: r["pareto"] for r in json_rows
+                  if r.get("pareto")}
+        with open(args.pareto_json, "w") as f:
+            json.dump({"fronts": fronts,
+                       "units": {"point": "[extra_macs, peak_bytes]"},
+                       "smoke": args.smoke}, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(fronts)} Pareto fronts to {args.pareto_json}")
 
     if args.update_baseline:
         if failed:

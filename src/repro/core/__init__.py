@@ -11,6 +11,9 @@ from .partition import (PEX_ATTR, Cascade, CascadeResult, PartitionResult,
                         Segment, SliceSpec, apply_cascade, apply_partition,
                         cascade_graph, partition_graph, plan_cascade,
                         plan_partition, sliceable_runs)
+from .solver import (ParetoPoint, SolverResult, branch_and_bound_order,
+                     enumerate_pex_configs, graph_macs, pareto_front,
+                     segment_extra_macs, solve)
 from . import profile
 
 __all__ = [
@@ -24,4 +27,7 @@ __all__ = [
     "SliceSpec", "apply_cascade", "apply_partition", "cascade_graph",
     "partition_graph", "plan_cascade", "plan_partition",
     "sliceable_runs", "profile",
+    "ParetoPoint", "SolverResult", "branch_and_bound_order",
+    "enumerate_pex_configs", "graph_macs", "pareto_front",
+    "segment_extra_macs", "solve",
 ]

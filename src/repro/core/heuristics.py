@@ -336,7 +336,10 @@ def _schedule_plain(graph: Graph, exact_limit: int, contract_limit: int,
 def schedule(graph: Graph, exact_limit: int = 18, contract_limit: int = 40,
              beam_width: int = 64, arena_budget: Optional[int] = None,
              partition: bool = False,
-             partition_opts: Optional[dict] = None) -> ScheduleResult:
+             partition_opts: Optional[dict] = None,
+             solver_nodes: int = 20_000, solver_op_limit: int = 24,
+             objective: str = "memory",
+             macs_cap: Optional[float] = None) -> ScheduleResult:
     """Best-effort minimal-peak schedule:
 
     1. greedy (always) — provides a branch-and-bound upper bound;
@@ -364,7 +367,43 @@ def schedule(graph: Graph, exact_limit: int = 18, contract_limit: int = 40,
     whole (capped on the halo-recompute MACs fraction) — followed by a
     whole-externals pass over the cascaded graph for any remaining
     over-budget runs (the cascade's tail).  The lowest peak wins.
+
+    **Joint branch-and-bound rung.**  After the ladder, graphs with at most
+    ``solver_op_limit`` operators get a bounded pass of the joint
+    (order × Pex split) solver (``core/solver.py``), seeded with the
+    ladder's winner so the result is never worse; ``solver_nodes`` caps its
+    anytime search (0 disables the rung).  ``objective="memory"`` (default)
+    keeps the ladder's contract — lowest peak wins, optionally bounded by
+    ``macs_cap`` (max extra-MACs fraction) — while ``objective="latency"``
+    (requires ``arena_budget``) returns the *cheapest* schedule that fits
+    the budget: among in-budget Pareto points, minimal halo-recompute MACs.
     """
+    best = _ladder(graph, exact_limit, contract_limit, beam_width,
+                   arena_budget, partition, partition_opts)
+    if solver_nodes and 0 < len(graph.operators) <= solver_op_limit:
+        from .solver import solve   # deferred: avoids import cycle
+        mode = ("latency" if objective == "latency"
+                and arena_budget is not None else "memory")
+        joint = arena_budget is not None or partition
+        sr = solve(graph, mode=mode, arena_budget=arena_budget,
+                   macs_cap=macs_cap, max_nodes=solver_nodes,
+                   max_rewrites=16 if joint else 0, seeds=[best])
+        cand = sr.best
+        if mode == "latency":
+            if cand.peak <= arena_budget:
+                return cand
+            return cand if cand.peak < best.peak else best
+        if cand.peak < best.peak:
+            return cand
+    return best
+
+
+def _ladder(graph: Graph, exact_limit: int, contract_limit: int,
+            beam_width: int, arena_budget: Optional[int],
+            partition: bool,
+            partition_opts: Optional[dict]) -> ScheduleResult:
+    """The fixed escalation ladder: reorder → pex → cascade → pex-over-tail
+    (greedy search inside each rung); the joint solver refines on top."""
     best = _schedule_plain(graph, exact_limit, contract_limit, beam_width)
     want = partition or (arena_budget is not None
                          and best.peak > arena_budget)

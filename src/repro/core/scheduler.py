@@ -32,6 +32,15 @@ class ScheduleResult:
     # sets, so this is also an upper bound on the model-wide extra-MACs
     # fraction — the latency price paid for the memory saving.
     extra_macs_frac: float = 0.0
+    # Latency accounting in the joint solver's uniform units (see
+    # core/solver.py): absolute halo-recompute MACs of the schedule's
+    # rewrite, and the original graph's estimated total MACs — so
+    # ``extra_macs / total_macs`` is the model-wide latency price.
+    # None on results produced outside the solver (units unknown there;
+    # ``extra_macs_frac`` above is then the only, segment-relative,
+    # figure).
+    extra_macs: Optional[int] = None
+    total_macs: Optional[int] = None
 
 
 def _split(graph: Graph, x_set: FrozenSet[str]) -> Tuple[List[str], List[str]]:

@@ -1,0 +1,299 @@
+"""Brute-force oracles for the joint scheduler (``core/solver.py``).
+
+Chain of trust, pinned by ``test_solver_oracle.py``:
+
+1. ``enumerate_min_peak`` — the literal brute force: every topological
+   order (DFS enumeration — identical to filtering all permutations by
+   ``is_valid_schedule``, without generating invalid ones), each priced by
+   ``Graph.peak_usage`` (the ground-truth memory model, no shared code with
+   the solver's incremental simulator).
+2. ``dp_min_peak`` — an independent subset DP (min over orders of the max
+   step cost) that re-derives the ``live_sets`` step-cost rule from
+   scratch; cross-checked against (1) on small graphs, then used where the
+   order count explodes (partitioned rewrites are mostly chains, but k
+   slices of j ops interleave).
+3. ``oracle_joint_points`` — the exhaustive (order × Pex split) space:
+   the unsplit graph plus *every* contiguous sub-run of every sliceable
+   run split into *every* feasible K, each solved by (1)/(2).  The MACs
+   axis reuses the solver's cost model (``segment_extra_macs``) by design:
+   the oracle verifies peak-optimality and non-domination *given* that
+   cost model, not the cost model itself.
+4. ``oracle_front`` — non-dominated points by a quadratic all-pairs
+   domination check (independent of the solver's sort-and-sweep).
+
+Also hosts the deterministic random-graph builders shared by the oracle
+and property suites, so fixed-seed fallbacks run without hypothesis.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, FrozenSet, Iterator, List, Optional, Sequence, Tuple
+
+from repro.core.graph import Graph, Operator, inplace_candidates
+from repro.core.partition import (PEX_ATTR, Segment, SliceSpec,
+                                  apply_partition, estimate_segment,
+                                  sliceable_runs)
+from repro.core.solver import segment_extra_macs
+
+
+class OracleBlowup(RuntimeError):
+    """The enumeration cap was hit — the graph is too big for this oracle."""
+
+
+# ------------------------------------------------------- order enumeration
+def topo_orders(graph: Graph) -> Iterator[List[Operator]]:
+    """Yield every topological order of ``graph`` exactly once."""
+    ops = graph.operators
+    n = len(ops)
+    used: List[bool] = [False] * n
+    produced: set = set()
+    order: List[int] = []
+
+    def rec() -> Iterator[List[Operator]]:
+        if len(order) == n:
+            yield [ops[k] for k in order]
+            return
+        for k, op in enumerate(ops):
+            if used[k]:
+                continue
+            if not all(i in produced or graph.producer(i) is None
+                       for i in op.inputs):
+                continue
+            used[k] = True
+            produced.add(op.output)
+            order.append(k)
+            yield from rec()
+            order.pop()
+            produced.discard(op.output)
+            used[k] = False
+
+    return rec()
+
+
+def enumerate_min_peak(graph: Graph, cap: int = 300_000) -> Tuple[int, int]:
+    """(optimal peak, number of topological orders) by full enumeration,
+    each order priced with the ground-truth ``Graph.peak_usage``."""
+    best: Optional[int] = None
+    count = 0
+    for sched in topo_orders(graph):
+        count += 1
+        if count > cap:
+            raise OracleBlowup(f"more than {cap} topological orders")
+        p = graph.peak_usage(sched)
+        if best is None or p < best:
+            best = p
+    assert best is not None, "graph has no operators"
+    return best, count
+
+
+# --------------------------------------------------------------- subset DP
+def _mem_state(graph: Graph, done: FrozenSet[int]) -> Tuple[set, Dict[str, int], int]:
+    """(produced tensors, remaining uses, live bytes) after executing
+    exactly the ops of ``done`` — rebuilt from scratch (no incremental
+    bookkeeping to share bugs with)."""
+    uses: Dict[str, int] = {}
+    for op in graph.operators:
+        for i in op.inputs:
+            uses[i] = uses.get(i, 0) + 1
+    for o in graph.outputs:
+        uses[o] = uses.get(o, 0) + 1
+    produced: set = set()
+    for k in done:
+        op = graph.operators[k]
+        produced.add(op.output)
+        for i in op.inputs:
+            uses[i] -= 1
+    live_bytes = 0
+    for t in graph.tensors:
+        if uses.get(t, 0) > 0 and (t in produced
+                                   or graph.producer(t) is None):
+            live_bytes += graph.size(t)
+    return produced, uses, live_bytes
+
+
+def _step_cost(graph: Graph, produced: set, uses: Dict[str, int],
+               live_bytes: int, op: Operator) -> int:
+    """Cost of executing ``op`` next, re-derived from the ``live_sets``
+    rule: live bytes plus the output buffer, unless an ``inplace`` op may
+    overwrite a producible input that dies at this very step."""
+    if op.attrs.get("inplace"):
+        out_b = graph.size(op.output)
+        for i in inplace_candidates(op):
+            if (graph.producer(i) is not None and graph.size(i) == out_b
+                    and uses.get(i, 0) - op.inputs.count(i) == 0):
+                return live_bytes
+    return live_bytes + graph.size(op.output)
+
+
+def dp_min_peak(graph: Graph, max_states: int = 500_000) -> int:
+    """Optimal peak by memoized DP over done-sets:
+    ``g(done) = min over ready op of max(step_cost, g(done + op))``."""
+    ops = graph.operators
+    n = len(ops)
+    memo: Dict[FrozenSet[int], int] = {}
+    full = frozenset(range(n))
+
+    def g(done: FrozenSet[int]) -> int:
+        if done == full:
+            return 0
+        hit = memo.get(done)
+        if hit is not None:
+            return hit
+        if len(memo) > max_states:
+            raise OracleBlowup(f"more than {max_states} DP states")
+        produced, uses, live_bytes = _mem_state(graph, done)
+        best: Optional[int] = None
+        for k, op in enumerate(ops):
+            if k in done:
+                continue
+            if not all(i in produced or graph.producer(i) is None
+                       for i in op.inputs):
+                continue
+            step = _step_cost(graph, produced, uses, live_bytes, op)
+            sub = max(step, g(done | {k}))
+            if best is None or sub < best:
+                best = sub
+        assert best is not None, "graph has a cycle"
+        memo[done] = best
+        return best
+
+    return g(frozenset())
+
+
+# --------------------------------------------------- joint (order × split)
+def oracle_joint_points(graph: Graph, max_k: int = 16,
+                        k_choices: Optional[Sequence[int]] = None,
+                        order_cap: int = 100_000
+                        ) -> List[Tuple[str, int, int]]:
+    """Exhaustive (label, optimal peak, extra MACs) over the joint space:
+    the unsplit graph, plus every contiguous sliceable sub-run split into
+    every feasible K.  Mirrors the solver's search space definition but
+    enumerates it independently (its own i/j/k loops)."""
+
+    def best_order_peak(g: Graph) -> int:
+        try:
+            return enumerate_min_peak(g, cap=order_cap)[0]
+        except OracleBlowup:
+            return dp_min_peak(g)
+
+    points = [("base", best_order_peak(graph), 0)]
+    for run in sliceable_runs(graph):
+        for i in range(len(run)):
+            for j in range(i + 1, len(run)):
+                ops = run[i:j + 1]
+                h = int(graph.tensors[ops[-1].output].shape[0])
+                cap_k = min(max_k, h)
+                ks = (sorted(set(k_choices)) if k_choices is not None
+                      else range(2, cap_k + 1))
+                for k in ks:
+                    if not 2 <= k <= cap_k:
+                        continue
+                    est, frac = estimate_segment(graph, ops, k)
+                    rg = apply_partition(
+                        graph, [Segment(list(ops), k, est, frac)])
+                    extra = segment_extra_macs(graph, ops, k)
+                    points.append((f"pex[{ops[0].name}..{ops[-1].name}/k{k}]",
+                                   best_order_peak(rg), extra))
+    return points
+
+
+def oracle_front(points: Sequence[Tuple[str, int, int]]
+                 ) -> List[Tuple[int, int]]:
+    """Non-dominated (extra MACs, peak) pairs by all-pairs domination —
+    independent of the solver's sort-and-sweep."""
+    front = set()
+    for _, peak, extra in points:
+        dominated = any(
+            p2 <= peak and e2 <= extra and (p2 < peak or e2 < extra)
+            for _, p2, e2 in points)
+        if not dominated:
+            front.add((extra, peak))
+    return sorted(front)
+
+
+# --------------------------------------------------- random graph builders
+def build_dag(n_inputs: int, sizes: Sequence[int],
+              wiring: Sequence[Sequence[int]],
+              inplace_every: int = 0) -> Graph:
+    """Deterministic DAG from drawn data (the property-suite shape):
+    ``wiring[i]`` picks operator i's inputs (indices into the tensors
+    created so far, modulo-folded).  With ``inplace_every`` = m > 0, every
+    m-th operator is marked ``inplace`` and its output sized to match its
+    first input — exercising the aliasing rule of the memory model."""
+    g = Graph()
+    tensors: List[str] = []
+    for i in range(n_inputs):
+        g.add_tensor(f"c{i}", sizes[i % len(sizes)])
+        tensors.append(f"c{i}")
+    for i, picks in enumerate(wiring):
+        ins = sorted({tensors[p % len(tensors)] for p in picks})
+        out = f"t{i}"
+        attrs = {}
+        size = sizes[(n_inputs + i) % len(sizes)]
+        if inplace_every and (i + 1) % inplace_every == 0:
+            size = g.size(ins[0])
+            attrs["inplace"] = True
+        g.add_tensor(out, size)
+        g.add_operator(f"op{i}", ins, out, **attrs)
+        tensors.append(out)
+    sinks = [t for t in g.tensors
+             if not g.consumers(t) and g.producer(t) is not None]
+    g.set_outputs(sinks or [tensors[-1]])
+    return g
+
+
+def random_dag(seed: int, max_ops: int = 8, inplace_every: int = 0) -> Graph:
+    """Fixed-seed companion of the hypothesis ``dags()`` strategy."""
+    rng = random.Random(seed)
+    n_inputs = rng.randint(1, 2)
+    n_ops = rng.randint(2, max_ops)
+    sizes = [rng.randint(1, 64) for _ in range(rng.randint(3, 6))]
+    wiring = [[rng.randint(0, 9) for _ in range(rng.randint(1, 2))]
+              for _ in range(n_ops)]
+    return build_dag(n_inputs, sizes, wiring, inplace_every)
+
+
+def sliceable_chain_graph(heights: Sequence[int], row_bytes: Sequence[int],
+                          kernels: Sequence[int],
+                          held_bytes: int = 0) -> Graph:
+    """A scheduling-only sliceable chain: op i maps ``heights[i] ->
+    heights[i+1]`` rows (stride 1 SAME, so heights must be constant) with
+    ``kernels[i]``-row windows; tensor i holds ``row_bytes[i]`` per row.
+    ``held_bytes`` adds a side branch (in -> aux, consumed by the final
+    join) so reordering interacts with the split choice."""
+    n = len(kernels)
+    assert len(heights) == n + 1 and len(row_bytes) == n + 1
+    assert len(set(heights)) == 1, "stride-1 SAME keeps the height"
+    g = Graph()
+    g.add_tensor("in", heights[0] * row_bytes[0], shape=(heights[0],))
+    prev = "in"
+    for i, k in enumerate(kernels):
+        out = f"t{i}"
+        g.add_tensor(out, heights[i + 1] * row_bytes[i + 1],
+                     shape=(heights[i + 1],))
+        op = g.add_operator(f"op{i}", [prev], out)
+        op.attrs[PEX_ATTR] = SliceSpec(kernel=k, stride=1,
+                                       sliced_inputs=(0,),
+                                       macs_per_row=row_bytes[i + 1])
+        prev = out
+    if held_bytes:
+        g.add_tensor("aux", held_bytes)
+        g.add_operator("aux_op", ["in"], "aux")
+        g.add_tensor("join", g.size(prev) + held_bytes)
+        g.add_operator("join_op", [prev, "aux"], "join")
+        prev = "join"
+    g.set_outputs([prev])
+    return g
+
+
+def random_sliceable_chain(seed: int, max_len: int = 3) -> Graph:
+    """Fixed-seed random sliceable chain, small enough for the oracles
+    (the joint oracle enumerates every split's rewrite: keep chains short
+    and heights small so K stays low and order counts tractable)."""
+    rng = random.Random(seed)
+    n = rng.randint(2, max_len)
+    h = rng.choice([4, 5])
+    row_bytes = [rng.choice([4, 8, 16, 24, 32]) for _ in range(n + 1)]
+    kernels = [rng.choice([1, 2, 3]) for _ in range(n)]
+    held = rng.choice([0, 0, 16, 64])
+    return sliceable_chain_graph([h] * (n + 1), row_bytes, kernels, held)

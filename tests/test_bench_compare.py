@@ -1,18 +1,24 @@
 """Unit tests for the CI benchmark-regression gate (benchmarks/compare.py):
 bytes are gated exactly, time with tolerance + slack, coverage loss fails,
-new rows pass with a note.  Also pins that the committed baseline is
-well-formed and carries the byte/dtype metadata the gate needs.
+new rows pass with a note, Pareto fronts are gated point-by-point.  Also
+pins that the committed baseline is well-formed and carries the
+byte/dtype/Pareto metadata the gate needs.
 """
 
 import pathlib
 
-from benchmarks.compare import compare_rows, load_rows
+import pytest
+
+from benchmarks.compare import compare_rows, front_covers, load_rows
 
 BASELINE = pathlib.Path(__file__).parent.parent / "benchmarks" / "BENCH_baseline.json"
 
 
-def _row(name, us=100.0, arena=None, dtypes=None):
-    return {"name": name, "us_per_call": us, "arena_bytes": arena, "dtypes": dtypes}
+def _row(name, us=100.0, arena=None, dtypes=None, pareto=None):
+    row = {"name": name, "us_per_call": us, "arena_bytes": arena, "dtypes": dtypes}
+    if pareto is not None:
+        row["pareto"] = pareto
+    return row
 
 
 def _index(rows):
@@ -39,12 +45,32 @@ def test_arena_growth_fails_exactly():
 def test_time_regression_gated_with_tol_and_slack():
     base = _index([_row("a", 1000.0)])
     within = _index([_row("a", 1199.0)])
+    exactly = _index([_row("a", 1200.0)])
     beyond = _index([_row("a", 1201.0)])
     assert compare_rows(base, within, 0.2, 0)[0] == []
+    # exactly at the envelope limit is within tolerance, not a regression
+    assert compare_rows(base, exactly, 0.2, 0)[0] == []
     failures, _ = compare_rows(base, beyond, 0.2, 0)
     assert len(failures) == 1 and "us/call regressed" in failures[0]
     # the absolute slack absorbs jitter on tiny rows
     assert compare_rows(base, beyond, 0.2, 5000)[0] == []
+    # ... and the slack boundary itself is inclusive too
+    at_slack = _index([_row("a", 1200.0 + 5000.0)])
+    past_slack = _index([_row("a", 1201.0 + 5000.0)])
+    assert compare_rows(base, at_slack, 0.2, 5000)[0] == []
+    assert compare_rows(base, past_slack, 0.2, 5000)[0] != []
+
+
+def test_lost_arena_bytes_fails():
+    """A fresh row that drops its byte figure must fail, not silently
+    disarm the strict bytes gate for that row."""
+    base = _index([_row("a", 100, 4096)])
+    lost = _index([_row("a", 100, None)])
+    failures, _ = compare_rows(base, lost, 0.2, 0)
+    assert len(failures) == 1 and "arena_bytes lost" in failures[0]
+    # a row that never had bytes stays ungated
+    never = _index([_row("b", 100, None)])
+    assert compare_rows(never, dict(never), 0.2, 0)[0] == []
 
 
 def test_missing_row_fails_and_new_row_notes():
@@ -63,6 +89,43 @@ def test_dtype_change_is_noted():
     assert any("dtypes changed" in n for n in notes)
 
 
+# ------------------------------------------------------------- Pareto gate
+FRONT = [[0, 32768], [1024, 31744], [4864, 26368]]
+
+
+def test_front_covers_matched_and_dominated():
+    assert front_covers(FRONT, FRONT) == []                    # identical
+    better = [[0, 32768], [512, 31744], [4864, 26000]]         # dominates
+    assert front_covers(FRONT, better) == []
+    worse = [[0, 32768], [1024, 31745], [4864, 26368]]         # peak +1
+    assert front_covers(FRONT, worse) == [(1024, 31744)]
+    sparser = [[0, 32768], [4864, 26368]]                      # point gone
+    assert front_covers(FRONT, sparser) == [(1024, 31744)]
+
+
+def test_pareto_point_regression_fails():
+    base = _index([_row("a", 100, 4096, pareto=FRONT)])
+    ok = _index([_row("a", 100, 4096, pareto=[list(p) for p in FRONT])])
+    assert compare_rows(base, ok, 0.2, 0)[0] == []
+    worse = _index([_row("a", 100, 4096,
+                         pareto=[[0, 32768], [1024, 31745], [4864, 26368]])])
+    failures, _ = compare_rows(base, worse, 0.2, 0)
+    assert len(failures) == 1 and "Pareto point" in failures[0]
+    assert "31744" in failures[0]
+
+
+def test_pareto_front_lost_fails_and_new_front_notes():
+    base = _index([_row("a", 100, 4096, pareto=FRONT)])
+    lost = _index([_row("a", 100, 4096)])
+    failures, _ = compare_rows(base, lost, 0.2, 0)
+    assert len(failures) == 1 and "Pareto front lost" in failures[0]
+    plain = _index([_row("a", 100, 4096)])
+    fresh = _index([_row("a", 100, 4096, pareto=FRONT)])
+    failures, notes = compare_rows(plain, fresh, 0.2, 0)
+    assert failures == []
+    assert any("new Pareto front" in n for n in notes)
+
+
 def test_committed_baseline_is_well_formed():
     rows, payload = load_rows(str(BASELINE))
     assert payload["smoke"] is True
@@ -74,6 +137,13 @@ def test_committed_baseline_is_well_formed():
     assert "int8" in dtypes and "float32" in dtypes
     # a known anchor: the paper's figure1 arena is 4960 B
     assert rows["executor.figure1.arena_B"]["arena_bytes"] == 4960
+    # the joint solver's Pareto row is present and carries a real front
+    front = rows["scheduler.pareto.chain"].get("pareto")
+    assert front and len(front) >= 3
+    extras = [p[0] for p in front]
+    peaks = [p[1] for p in front]
+    assert extras == sorted(extras) and extras[0] == 0
+    assert peaks == sorted(peaks, reverse=True)
 
 
 def test_baseline_byte_rows_match_current_scheduling():
@@ -105,8 +175,6 @@ def test_update_baseline_envelope_merge():
 
 
 def test_update_baseline_refuses_bytes_growth():
-    import pytest
-
     from benchmarks.run import merge_baseline
 
     base = {"rows": [_row("a", us=100.0, arena=4096)]}
@@ -117,3 +185,46 @@ def test_update_baseline_refuses_bytes_growth():
                            allow_bytes_growth=True)
     assert _index(base["rows"])["a"]["arena_bytes"] == 5000
     assert any("--allow-bytes-growth" in n for n in notes)
+
+
+def test_update_baseline_refuses_lost_bytes_even_with_growth_flag():
+    """--allow-bytes-growth loosens numbers; it must NOT bypass the
+    lost-arena_bytes refusal (a row silently leaving the gate entirely)."""
+    from benchmarks.run import merge_baseline
+
+    for flag in (False, True):
+        base = {"rows": [_row("a", us=100.0, arena=4096)]}
+        with pytest.raises(SystemExit, match="refusing to merge"):
+            merge_baseline(base, [_row("a", us=80.0, arena=None)],
+                           allow_bytes_growth=flag)
+        assert _index(base["rows"])["a"]["arena_bytes"] == 4096  # untouched
+
+
+def test_update_baseline_pareto_semantics():
+    """A merge must not silently regress or drop a committed front:
+    uncovered points refuse without --allow-bytes-growth, a lost front
+    always refuses (even with the flag), a covering front merges."""
+    from benchmarks.run import merge_baseline
+
+    worse = [[0, 32768], [1024, 31745], [4864, 26368]]
+    base = {"rows": [_row("a", us=100.0, arena=4096, pareto=FRONT)]}
+    with pytest.raises(SystemExit, match="refusing to loosen"):
+        merge_baseline(base, [_row("a", us=80.0, arena=4096, pareto=worse)])
+    notes = merge_baseline(base,
+                           [_row("a", us=80.0, arena=4096, pareto=worse)],
+                           allow_bytes_growth=True)
+    assert _index(base["rows"])["a"]["pareto"] == worse
+    assert any("pareto front" in n for n in notes)
+
+    for flag in (False, True):
+        base = {"rows": [_row("a", us=100.0, arena=4096, pareto=FRONT)]}
+        with pytest.raises(SystemExit, match="refusing to merge"):
+            merge_baseline(base, [_row("a", us=80.0, arena=4096)],
+                           allow_bytes_growth=flag)
+
+    base = {"rows": [_row("a", us=100.0, arena=4096, pareto=FRONT)]}
+    better = [[0, 32768], [512, 31744], [4864, 26000]]
+    notes = merge_baseline(base,
+                           [_row("a", us=80.0, arena=4096, pareto=better)])
+    assert _index(base["rows"])["a"]["pareto"] == better
+    assert any("pareto front" in n for n in notes)

@@ -100,6 +100,44 @@ def _as_f32(g):
     return f
 
 
+def _contracted_beats_greedy_counterexample():
+    """The minimal pinned counterexample to ``contracted <= greedy`` (found
+    by random search over the ``dags()`` space, then shrunk to 3 ops and
+    sizes {1, 2}).  The chain op0 -> op1 must run contiguously under the
+    contracted DP, but the cheapest point to run op2 is *between* them —
+    after op2's last input c0 can retire, before the 2-byte t1
+    materialises — which only greedy can express."""
+    g = Graph()
+    g.add_tensor("c0", 2)
+    g.add_tensor("c1", 1)
+    g.add_tensor("t0", 1)
+    g.add_tensor("t1", 2)
+    g.add_tensor("t2", 1)
+    g.add_operator("op0", ["c0", "c1"], "t0")
+    g.add_operator("op1", ["t0"], "t1")
+    g.add_operator("op2", ["c0"], "t2")
+    g.set_outputs(["t1", "t2"])
+    return g
+
+
+def test_contracted_is_not_upper_bounded_by_greedy():
+    """Regression pin for the documented ~2% unsoundness of assuming
+    ``contracted <= greedy`` (see the module docstring): on this fixture
+    the contracted DP is strictly WORSE than greedy, and ``schedule()``
+    must therefore take the min over both rungs rather than trust the
+    contracted result."""
+    g = _contracted_beats_greedy_counterexample()
+    contracted = minimise_peak_memory_contracted(g)
+    greedy = greedy_schedule(g)
+    assert contracted is not None
+    assert contracted.peak == 5
+    assert greedy.peak == 4
+    assert contracted.peak > greedy.peak      # the pinned counterexample
+    res = schedule(g)
+    assert res.peak <= min(contracted.peak, greedy.peak)
+    assert res.peak == minimise_peak_memory(g).peak == 4
+
+
 @given(dags())
 @settings(max_examples=30, deadline=None)
 def test_int8_arena_never_exceeds_f32(g):
