@@ -33,3 +33,50 @@ def run(report):
     dt = (time.perf_counter() - t0) * 1e6
     err = float(jnp.abs(od - decode_attention_ref(qd, k, v, lengths)).max())
     report("kernels.decode_attention.max_err", dt, err)
+
+    _run_quant(report)
+
+
+def _run_quant(report):
+    """Fused int8 conv kernels vs the q-op reference semantics: max_err is
+    in integer output units and must be exactly 0 (bit-identity is the
+    contract, not a tolerance — see tests/test_qkernels.py)."""
+    import numpy as np
+
+    from repro.graphs.cnn_ops import qconv2d, qdwconv2d
+    from repro.kernels import qconv_fused, qdwconv_fused
+
+    rng = np.random.default_rng(0)
+
+    def qrand(shape):
+        return jnp.asarray(rng.integers(-128, 128, shape, dtype=np.int8))
+
+    qp = dict(mult=0.0123, zp_in=3, zp_out=-5)
+    x = qrand((48, 48, 32))
+
+    w1 = qrand((1, 1, 32, 64))
+    t0 = time.perf_counter()
+    o = qconv_fused(x, w1, stride=1, interpret=True, **qp)
+    o.block_until_ready()
+    dt = (time.perf_counter() - t0) * 1e6
+    ref = qconv2d(x, w1, 1, qp["mult"], qp["zp_in"], qp["zp_out"])
+    report("kernels.qconv1x1.max_err", dt,
+           int(jnp.abs(o.astype(jnp.int32) - ref.astype(jnp.int32)).max()))
+
+    w3 = qrand((3, 3, 32, 64))
+    t0 = time.perf_counter()
+    o = qconv_fused(x, w3, stride=2, interpret=True, **qp)
+    o.block_until_ready()
+    dt = (time.perf_counter() - t0) * 1e6
+    ref = qconv2d(x, w3, 2, qp["mult"], qp["zp_in"], qp["zp_out"])
+    report("kernels.qconv3x3s2.max_err", dt,
+           int(jnp.abs(o.astype(jnp.int32) - ref.astype(jnp.int32)).max()))
+
+    wd = qrand((3, 3, 32, 1))
+    t0 = time.perf_counter()
+    o = qdwconv_fused(x, wd, stride=1, interpret=True, **qp)
+    o.block_until_ready()
+    dt = (time.perf_counter() - t0) * 1e6
+    ref = qdwconv2d(x, wd, 1, qp["mult"], qp["zp_in"], qp["zp_out"])
+    report("kernels.qdwconv3x3.max_err", dt,
+           int(jnp.abs(o.astype(jnp.int32) - ref.astype(jnp.int32)).max()))

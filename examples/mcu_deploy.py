@@ -87,8 +87,8 @@ def main():
     print(f"{res.method:26s}: {res.peak / 1024:7.1f} KB "
           f"(arena plan {plan.arena_size / 1024:.1f} KB)")
     print(f"  fits 256 KB: {plan.arena_size <= SRAM_SMALL}   "
-          f"halo-recompute overhead <= {res.extra_macs_frac:.1%} extra MACs"
-          f" (worst streamed region; model-wide is lower)")
+          f"halo-recompute overhead = {res.extra_macs_frac:.1%} extra MACs"
+          f" (whole-graph)")
     print("  (ring-buffer streaming of the high-resolution front: no "
           "inter-segment\n   tensor ever exists whole — DESIGN.md §7; "
           "executable bit-identity is\n   pinned in tests/test_cascade.py)")

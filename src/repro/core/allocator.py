@@ -227,12 +227,23 @@ def inplace_alias_groups(graph: Graph, schedule: Sequence[Operator]
 
 
 class ArenaPlanner:
-    """Offline best-fit offset assignment (greedy by decreasing size).
+    """Offline best-fit offset assignment (greedy over candidate orders).
 
     Tensors chained through ``inplace`` operators are planned as one
     shared buffer (same offset, union of lifetimes) — without this, a
     partial-execution concat chain would be charged K copies of the
     output tensor and the sliced schedule's savings would vanish.
+
+    Greedy best-fit is order-sensitive: by-decreasing-size (TFLite's
+    order) is optimal on conventional layer-by-layer lifetimes, but a
+    cascade's ring buffers have long, irregular, *interleaved* lifetimes
+    where placing a mid-sized long-lived ring after a large short-lived
+    activation can strand an alignment-rounded gap that no later tensor
+    fills.  ``plan`` therefore runs the same greedy under a small fixed
+    set of orderings (decreasing size, increasing birth, decreasing
+    lifetime length — each size-tie-broken) and keeps the smallest arena,
+    preferring the earliest ordering on ties so conventional graphs keep
+    their historical (by-size) placements.
 
     ``alignment=None`` (default) aligns offsets to the graph's widest
     element type, so every placement can be bitcast-viewed at its natural
@@ -254,41 +265,54 @@ class ArenaPlanner:
         groups = [(rep, min(s for _, s, _ in members),
                    max(e for _, _, e in members), members)
                   for rep, members in by_rep.items()]
-        items = sorted(groups, key=lambda it: (-graph.size(it[0]), it[1]))
-        placed: List[Placement] = []
-        expanded: List[Placement] = []
 
         def align(x: int) -> int:
             return (x + alignment - 1) // alignment * alignment
 
-        def expand(rep: str, offset: int,
-                   members: List[Tuple[str, int, int]]) -> None:
+        def greedy(items: List[Tuple[str, int, int, list]]
+                   ) -> Tuple[int, List[Placement]]:
+            placed: List[Placement] = []
+            for rep, s, e, _members in items:
+                size = graph.size(rep)
+                if size == 0:
+                    placed.append(Placement(rep, 0, 0, s, e))
+                    continue
+                overlapping = [p for p in placed
+                               if not (p.end < s or e < p.start)
+                               and p.size > 0]
+                overlapping.sort(key=lambda p: p.offset)
+                best_off, best_gap = None, None
+                cursor = 0
+                for p in overlapping:
+                    gap = p.offset - cursor
+                    if gap >= size and (best_gap is None or gap < best_gap):
+                        best_off, best_gap = cursor, gap
+                    cursor = max(cursor, align(p.offset + p.size))
+                offset = best_off if best_off is not None else cursor
+                placed.append(Placement(rep, offset, size, s, e))
+            arena = max((p.offset + p.size for p in placed), default=0)
+            return arena, placed
+
+        orders = (
+            lambda it: (-graph.size(it[0]), it[1]),          # by size
+            lambda it: (it[1], -graph.size(it[0])),          # by birth
+            lambda it: (it[1] - it[2], -graph.size(it[0])),  # by lifetime
+        )
+        best_arena, best_placed = None, None
+        for key in orders:
+            arena, placed = greedy(sorted(groups, key=key))
+            if best_arena is None or arena < best_arena:
+                best_arena, best_placed = arena, placed
+
+        offsets = {p.tensor: p.offset for p in best_placed}
+        expanded: List[Placement] = []
+        for rep, _s, _e, members in groups:
             shared = rep if len(members) > 1 else None
             for name, ms, me in members:
-                expanded.append(Placement(name, offset, graph.size(name),
-                                          ms, me, alias=shared))
-
-        for rep, s, e, members in items:
-            size = graph.size(rep)
-            if size == 0:
-                placed.append(Placement(rep, 0, 0, s, e))
-                expand(rep, 0, members)
-                continue
-            overlapping = [p for p in placed
-                           if not (p.end < s or e < p.start) and p.size > 0]
-            overlapping.sort(key=lambda p: p.offset)
-            best_off, best_gap = None, None
-            cursor = 0
-            for p in overlapping:
-                gap = p.offset - cursor
-                if gap >= size and (best_gap is None or gap < best_gap):
-                    best_off, best_gap = cursor, gap
-                cursor = max(cursor, align(p.offset + p.size))
-            offset = best_off if best_off is not None else cursor
-            placed.append(Placement(rep, offset, size, s, e))
-            expand(rep, offset, members)
-        arena = max((p.offset + p.size for p in placed), default=0)
-        return ArenaPlan(expanded, arena)
+                expanded.append(Placement(name, offsets[rep],
+                                          graph.size(name), ms, me,
+                                          alias=shared))
+        return ArenaPlan(expanded, best_arena)
 
     @staticmethod
     def validate(plan: ArenaPlan, graph: Optional[Graph] = None) -> None:

@@ -419,6 +419,8 @@ def _ladder(graph: Graph, exact_limit: int, contract_limit: int,
         if pbest.peak < best.peak:
             best = dataclasses.replace(pbest, graph=pg,
                                        method=pbest.method + "+pex",
+                                       extra_macs=pr.extra_macs,
+                                       total_macs=pr.total_macs,
                                        extra_macs_frac=pr.extra_macs_frac)
     if arena_budget is None or best.peak <= arena_budget:
         return best
@@ -431,7 +433,7 @@ def _ladder(graph: Graph, exact_limit: int, contract_limit: int,
     if not cr.cascades:
         return best
     cg = cr.graph
-    frac = cr.extra_macs_frac
+    extra = cr.extra_macs
     cbest = min(_cheap_candidates(cg), key=lambda r: r.peak)
     method = cbest.method + "+cascade"
     if cbest.peak > arena_budget:
@@ -444,8 +446,16 @@ def _ladder(graph: Graph, exact_limit: int, contract_limit: int,
             if tbest.peak < cbest.peak:
                 cg, cbest = tr.graph, tbest
                 method = tbest.method + "+cascade+pex"
-                frac = max(frac, tr.extra_macs_frac)
+                # composed rewrites: halo recompute adds up — the Pex pass
+                # re-runs rows of the *cascaded* graph, on top of the
+                # cascade's own recompute.  Keep the fraction anchored on
+                # the original graph's MACs so it composes with the
+                # cascade rung and the solver's points.
+                extra += tr.extra_macs
     if cbest.peak < best.peak:
+        frac = extra / cr.total_macs if cr.total_macs else 0.0
         return dataclasses.replace(cbest, graph=cg, method=method,
+                                   extra_macs=extra,
+                                   total_macs=cr.total_macs,
                                    extra_macs_frac=frac)
     return best

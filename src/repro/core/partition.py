@@ -217,6 +217,7 @@ class Segment:
     k: int
     est_peak: int            # local estimate: externals + output + slice live
     extra_macs_frac: float   # halo recompute cost relative to segment MACs
+    extra_macs: int = 0      # absolute halo-recompute MACs (whole-graph units)
 
 
 def _row_bytes(graph: Graph, tensor: str) -> int:
@@ -240,6 +241,43 @@ def _external_inputs(ops: Sequence[Operator]) -> List[str]:
             if i not in internal and i not in exts:
                 exts.append(i)
     return exts
+
+
+# ----------------------------------------------------------- MACs accounting
+# Canonical home of the latency cost model's units (the joint solver and the
+# brute-force oracle import these via core/solver.py): absolute MACs so
+# numbers from different rewrites — single segments, multi-segment Pex,
+# cascades — are commensurable, and whole-graph totals so every reported
+# ``extra_macs_frac`` means "fraction of the model's inference MACs".
+def op_macs(graph: Graph, op: Operator) -> int:
+    """Estimated MACs of one operator: ``rows * macs_per_row`` when the op
+    has a spatial height (the Pex cost model's unit), otherwise the output
+    bytes as a proxy."""
+    h = _height(graph, op.output)
+    if h is None:
+        return max(1, graph.size(op.output))
+    return h * _macs_per_row(graph, op)
+
+
+def graph_macs(graph: Graph) -> int:
+    """Estimated MACs of the whole (unpartitioned) graph."""
+    return sum(op_macs(graph, op) for op in graph.operators)
+
+
+def segment_extra_macs(graph: Graph, ops: Sequence[Operator], k: int) -> int:
+    """Absolute halo-recompute MACs of splitting ``ops`` into K slices:
+    rows computed beyond each op's height, priced at its per-row MACs."""
+    rows_done: Dict[str, int] = {}
+    for plan in slice_plans(graph, ops, k):
+        for op in ops:
+            oa, ob = plan.out[op.name]
+            rows_done[op.name] = rows_done.get(op.name, 0) + (ob - oa)
+    extra = 0
+    for op in ops:
+        h = _height(graph, op.output)
+        assert h is not None
+        extra += max(0, rows_done[op.name] - h) * _macs_per_row(graph, op)
+    return extra
 
 
 def estimate_segment(graph: Graph, ops: Sequence[Operator], k: int
@@ -319,7 +357,8 @@ def _choose_in_run(graph: Graph, run: List[Operator],
     _, i, j, k, frac = best
     ops = run[i:j + 1]
     est, frac = estimate_segment(graph, ops, k)
-    segs = [Segment(list(ops), k, est, frac)]
+    segs = [Segment(list(ops), k, est, frac,
+                    segment_extra_macs(graph, ops, k))]
     segs += _choose_in_run(graph, run[:i], budget, max_k, overhead_cap,
                            k_choices)
     segs += _choose_in_run(graph, run[j + 1:], budget, max_k, overhead_cap,
@@ -457,20 +496,28 @@ def _emit_segment(old: Graph, new: Graph, seg: Segment) -> None:
 class PartitionResult:
     graph: Graph
     segments: List[Segment]
+    total_macs: int = 0      # graph_macs of the ORIGINAL (unsplit) graph
 
     @property
     def n_slices(self) -> int:
         return sum(s.k for s in self.segments)
 
     @property
+    def extra_macs(self) -> int:
+        """Absolute halo-recompute MACs over all segments (disjoint ops)."""
+        return sum(s.extra_macs for s in self.segments)
+
+    @property
     def extra_macs_frac(self) -> float:
-        """Halo recompute overhead, worst segment (the Pex latency cost)."""
-        return max((s.extra_macs_frac for s in self.segments), default=0.0)
+        """Halo recompute overhead as a fraction of the whole graph's MACs
+        (the model-wide latency price — same units as the joint solver's
+        front axis)."""
+        return self.extra_macs / self.total_macs if self.total_macs else 0.0
 
     def __str__(self) -> str:
         return (f"pex: {len(self.segments)} segments, "
                 f"{self.n_slices} slices, halo overhead "
-                f"<= {self.extra_macs_frac:.1%}")
+                f"{self.extra_macs_frac:.1%} of graph MACs")
 
 
 def apply_partition(graph: Graph, segments: Sequence[Segment]) -> Graph:
@@ -507,8 +554,9 @@ def partition_graph(graph: Graph, budget: Optional[int] = None,
     graph unchanged (``result.graph is graph``) when nothing is eligible."""
     segments = plan_partition(graph, budget, max_k, overhead_cap, k_choices)
     if not segments:
-        return PartitionResult(graph, [])
-    return PartitionResult(apply_partition(graph, segments), segments)
+        return PartitionResult(graph, [], graph_macs(graph))
+    return PartitionResult(apply_partition(graph, segments), segments,
+                           graph_macs(graph))
 
 
 # ======================================================= cascaded streaming
@@ -546,9 +594,10 @@ class Cascade:
     k: int
     ring_rows: List[int]          # per boundary i (= output of segments[i])
     est_peak: int
-    extra_macs_frac: float
+    extra_macs_frac: float        # relative to the cascade's own MACs
     min_rows: int = 1             # per-iteration chunk floor (see plans)
     rate_div: int = 1             # pipeline slowdown factor (see plans)
+    extra_macs: int = 0           # absolute halo MACs (whole-graph units)
 
     @property
     def ops(self) -> List[Operator]:
@@ -714,8 +763,10 @@ def cascade_slice_plans(graph: Graph, segments: Sequence[List[Operator]],
 
 def estimate_cascade(graph: Graph, segments: Sequence[List[Operator]],
                      k: int, min_rows: int = 1, rate_div: int = 1
-                     ) -> Tuple[int, float, List[int]]:
-    """(estimated peak bytes, halo-recompute MACs fraction, ring rows).
+                     ) -> Tuple[int, float, List[int], int]:
+    """(estimated peak bytes, halo-recompute MACs as a fraction of the
+    cascade's own MACs — the planner's overhead-cap unit, ring rows,
+    absolute halo-recompute MACs — the whole-graph reporting unit).
 
     Charges: every cascade-external input whole, each boundary at
     ``ring_rows * row_bytes`` (the streaming saving), the final output
@@ -757,7 +808,8 @@ def estimate_cascade(graph: Graph, segments: Sequence[List[Operator]],
         extra = rows_done.get(op.name, 0) - h
         extra_macs += max(0, extra) * _macs_per_row(graph, op)
     frac = extra_macs / base_macs if base_macs else 0.0
-    return ext_bytes + ring_bytes + out_bytes + slice_live, frac, rings
+    return (ext_bytes + ring_bytes + out_bytes + slice_live, frac, rings,
+            extra_macs)
 
 
 def _cut_candidates(graph: Graph, run: Sequence[Operator]) -> List[int]:
@@ -879,7 +931,7 @@ def plan_cascade(graph: Graph, budget: Optional[int] = None,
                             if caps in seen_caps:
                                 continue
                             seen_caps.add(caps)
-                            est, frac, rings = estimate_cascade(
+                            est, frac, rings, extra = estimate_cascade(
                                 graph, segs, k, mr, rd)
                             if frac > overhead_cap:
                                 continue
@@ -888,10 +940,11 @@ def plan_cascade(graph: Graph, budget: Optional[int] = None,
                             key = (0 if meets else 1, est, frac, k, mr, rd)
                             if best is None or key < best[0]:
                                 best = (key, segs, k, est, frac, rings,
-                                        mr, rd)
+                                        mr, rd, extra)
         if best is not None:
-            _, segs, k, est, frac, rings, mr, rd = best
-            cascades.append(Cascade(segs, k, rings, est, frac, mr, rd))
+            _, segs, k, est, frac, rings, mr, rd, extra = best
+            cascades.append(Cascade(segs, k, rings, est, frac, mr, rd,
+                                    extra))
     return cascades
 
 
@@ -1080,16 +1133,23 @@ def _emit_cascade(old: Graph, new: Graph, casc: Cascade) -> None:
 class CascadeResult:
     graph: Graph
     cascades: List[Cascade]
+    total_macs: int = 0      # graph_macs of the ORIGINAL graph
+
+    @property
+    def extra_macs(self) -> int:
+        """Absolute halo-recompute MACs over all cascades (disjoint ops)."""
+        return sum(c.extra_macs for c in self.cascades)
 
     @property
     def extra_macs_frac(self) -> float:
-        """Halo recompute overhead, worst cascade."""
-        return max((c.extra_macs_frac for c in self.cascades), default=0.0)
+        """Halo recompute overhead as a fraction of the whole graph's MACs
+        (same whole-graph units as ``PartitionResult`` and the solver)."""
+        return self.extra_macs / self.total_macs if self.total_macs else 0.0
 
     def __str__(self) -> str:
         return (f"cascade: {len(self.cascades)} cascades, "
                 f"{sum(len(c.segments) for c in self.cascades)} segments, "
-                f"halo overhead <= {self.extra_macs_frac:.1%}")
+                f"halo overhead {self.extra_macs_frac:.1%} of graph MACs")
 
 
 def apply_cascade(graph: Graph, cascades: Sequence[Cascade]) -> Graph:
@@ -1126,5 +1186,6 @@ def cascade_graph(graph: Graph, budget: Optional[int] = None,
     (``result.graph is graph``) when no run can cascade."""
     cascades = plan_cascade(graph, budget, max_k, overhead_cap, k_choices)
     if not cascades:
-        return CascadeResult(graph, [])
-    return CascadeResult(apply_cascade(graph, cascades), cascades)
+        return CascadeResult(graph, [], graph_macs(graph))
+    return CascadeResult(apply_cascade(graph, cascades), cascades,
+                         graph_macs(graph))

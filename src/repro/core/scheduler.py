@@ -27,18 +27,17 @@ class ScheduleResult:
     # operators belong to this graph (None = the graph passed by the caller).
     graph: Optional["Graph"] = None
     # Halo-recompute cost of a partial-execution/cascade rewrite: extra
-    # MACs as a fraction of the *worst rewritten region's* own MACs
-    # (0.0 = whole-operator schedule).  Regions are disjoint operator
-    # sets, so this is also an upper bound on the model-wide extra-MACs
-    # fraction — the latency price paid for the memory saving.
+    # MACs as a fraction of the *whole graph's* MACs (0.0 = whole-operator
+    # schedule) — the model-wide latency price paid for the memory saving.
+    # Uniform units everywhere: the ladder rungs, the cascade planner and
+    # the joint solver all anchor on ``graph_macs(original graph)``
+    # (canonical accounting in core/partition.py), so fractions from any
+    # producer compare directly.
     extra_macs_frac: float = 0.0
-    # Latency accounting in the joint solver's uniform units (see
-    # core/solver.py): absolute halo-recompute MACs of the schedule's
-    # rewrite, and the original graph's estimated total MACs — so
-    # ``extra_macs / total_macs`` is the model-wide latency price.
-    # None on results produced outside the solver (units unknown there;
-    # ``extra_macs_frac`` above is then the only, segment-relative,
-    # figure).
+    # The absolute figures behind the fraction: halo-recompute MACs of the
+    # schedule's rewrite, and the original graph's estimated total MACs
+    # (``extra_macs / total_macs == extra_macs_frac``).  None only on
+    # plain reorder-only results that never touched a rewrite pass.
     extra_macs: Optional[int] = None
     total_macs: Optional[int] = None
 

@@ -43,10 +43,11 @@ The searched Pex space is ``{no split} ∪ {one (sub-run, K) split}`` — one
 partitioned segment per solve, every contiguous sub-run of every sliceable
 run, every K in ``2..min(max_k, rows)`` (or ``k_choices``).  Multi-segment
 and cascade rewrites reach the solver only as *seeds* from the escalation
-ladder (`heuristics.schedule` passes its rung results in), keeping the
-front's MACs accounting uniform: ``extra_macs`` is the absolute halo
-recompute of the one segment, ``extra_macs_frac`` is relative to the whole
-graph's MACs (``graph_macs``).
+ladder (`heuristics.schedule` passes its rung results in).  The MACs
+accounting is uniform on both sides: ``extra_macs`` is always absolute halo
+recompute and ``extra_macs_frac`` is always relative to the whole graph's
+MACs (``graph_macs`` — canonical definitions in ``core/partition.py``), for
+solver points and ladder seeds alike.
 """
 from __future__ import annotations
 
@@ -56,46 +57,16 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 from .graph import Graph, Operator, inplace_candidates
 from .heuristics import _cheap_candidates
-from .partition import (Segment, _height, _macs_per_row, apply_partition,
-                        estimate_segment, slice_plans, sliceable_runs,
-                        spec_of)
+from .partition import (Segment, _height, apply_partition, estimate_segment,
+                        graph_macs, op_macs, segment_extra_macs,
+                        sliceable_runs)
 from .scheduler import ScheduleResult
 
-
-# ------------------------------------------------------------- MACs accounting
-def op_macs(graph: Graph, op: Operator) -> int:
-    """Estimated MACs of one operator: ``rows * macs_per_row`` when the op
-    has a spatial height (the Pex cost model's unit), otherwise the output
-    bytes as a proxy.  Shared with the brute-force oracle so the front's
-    cost axis means the same thing on both sides."""
-    h = _height(graph, op.output)
-    if h is not None:
-        spec = spec_of(op)
-        if spec is not None and spec.macs_per_row > 0:
-            return h * spec.macs_per_row
-        return h * max(1, graph.size(op.output) // h)
-    return max(1, graph.size(op.output))
-
-
-def graph_macs(graph: Graph) -> int:
-    """Estimated MACs of the whole (unpartitioned) graph."""
-    return sum(op_macs(graph, op) for op in graph.operators)
-
-
-def segment_extra_macs(graph: Graph, ops: Sequence[Operator], k: int) -> int:
-    """Absolute halo-recompute MACs of splitting ``ops`` into K slices:
-    rows computed beyond each op's height, priced at its per-row MACs."""
-    rows_done: Dict[str, int] = {}
-    for plan in slice_plans(graph, ops, k):
-        for op in ops:
-            oa, ob = plan.out[op.name]
-            rows_done[op.name] = rows_done.get(op.name, 0) + (ob - oa)
-    extra = 0
-    for op in ops:
-        h = _height(graph, op.output)
-        assert h is not None
-        extra += max(0, rows_done[op.name] - h) * _macs_per_row(graph, op)
-    return extra
+# Re-exported for the brute-force oracle and older call sites: the MACs
+# accounting (op_macs / graph_macs / segment_extra_macs) now lives in
+# ``core/partition.py`` next to the cost model whose units it defines.
+__all__ = ["op_macs", "graph_macs", "segment_extra_macs", "solve",
+           "enumerate_pex_configs", "pareto_front"]
 
 
 # ------------------------------------------------------- incremental sim model
@@ -404,10 +375,10 @@ def solve(graph: Graph, mode: str = "memory",
         dropped = True
     for ops, k in configs:
         est, frac_seg = estimate_segment(graph, ops, k)
-        seg = Segment(list(ops), k, est, frac_seg)
+        extra = segment_extra_macs(graph, ops, k)
+        seg = Segment(list(ops), k, est, frac_seg, extra)
         rewritten = apply_partition(graph, [seg])
         res, ok = branch_and_bound_order(rewritten, budget)
-        extra = segment_extra_macs(graph, ops, k)
         frac = extra / total_macs if total_macs else 0.0
         method = (f"bnb+pex[{ops[0].name}..{ops[-1].name}/k{k}]")
         res = dataclasses.replace(res, graph=rewritten, method=method,
@@ -434,17 +405,24 @@ def solve(graph: Graph, mode: str = "memory",
     assert best is not None
 
     # ---- external seeds (ladder rungs: multi-segment pex, cascades) ------
-    # Their extra_macs_frac is segment-relative (an upper bound on the
-    # model-wide fraction), so they only compete on peak / feasibility:
-    # a seed wins when it satisfies the active constraint at a strictly
-    # lower peak, or fits a budget the solver space misses.
+    # Seeds carry the same whole-graph extra_macs_frac as solver points
+    # (canonical MACs accounting in core/partition.py), so the macs_cap
+    # check below compares like with like: a seed wins when it satisfies
+    # the active constraint at a strictly lower peak, or fits a budget the
+    # solver space misses.
     for s in seeds:
         if s is None:
             continue
         if mode == "latency":
-            if s.peak <= arena_budget and (best.peak > arena_budget
-                                           or s.peak < best.peak):
-                best = s
+            # same rule as the front pick: among in-budget candidates,
+            # fewest extra MACs wins, peak breaks ties.  (Seeds used to
+            # carry extra_macs=None and were judged on peak alone — a
+            # recomputing cascade could displace a free in-budget point.)
+            if s.peak <= arena_budget:
+                s_key = (s.extra_macs or 0, s.peak)
+                if (best.peak > arena_budget
+                        or s_key < (best.extra_macs or 0, best.peak)):
+                    best = s
         else:
             cap = float("inf") if macs_cap is None else macs_cap
             if s.extra_macs_frac <= cap + 1e-12 and s.peak < best.peak:

@@ -380,7 +380,11 @@ def qconcat(*xs, mults: Sequence[float], zps: Sequence[int], zp_out: int):
 # in ``pex_pads``), tracing the SAME jnp/lax calls the simulator fns run —
 # so compiled outputs stay bit-identical to the interpreter.  The pointwise
 # conv optionally routes through the Pallas fused conv+bias+relu kernel
-# (different accumulation order: fast, not bit-stable — opt-in).
+# (different accumulation order: fast, not bit-stable — opt-in).  The
+# quantized convs route through the fused int8 kernels under
+# ``kernels/conv_quant/`` when ``use_pallas=True`` — those ARE bit-identical
+# (int32 accumulation is exact and order-independent; see the kernel module
+# docstring), so ``use_pallas`` costs no precision on int8 graphs.
 from repro.mcu.compile import register_lowering
 
 
@@ -415,15 +419,31 @@ def _lower_add(ctx, op: Operator, x, y):
 @register_lowering("qconv")
 def _lower_qconv(ctx, op: Operator, x):
     a = op.attrs
+    hpad = a.get("pex_pads")
+    if ctx.use_pallas and x.ndim == 3:
+        from repro.kernels import qconv_fused
+        return qconv_fused(x, jnp.asarray(a["weight_q"]), stride=a["stride"],
+                           mult=a["mult"], zp_in=a["zp_in"],
+                           zp_out=a["zp_out"],
+                           hpad=None if hpad is None else tuple(hpad),
+                           interpret=ctx.interpret)
     return qconv2d(x, a["weight_q"], a["stride"], a["mult"], a["zp_in"],
-                   a["zp_out"], hpad=a.get("pex_pads"))
+                   a["zp_out"], hpad=hpad)
 
 
 @register_lowering("qdwconv")
 def _lower_qdwconv(ctx, op: Operator, x):
     a = op.attrs
+    hpad = a.get("pex_pads")
+    if ctx.use_pallas and x.ndim == 3:
+        from repro.kernels import qdwconv_fused
+        return qdwconv_fused(x, jnp.asarray(a["weight_q"]),
+                             stride=a["stride"], mult=a["mult"],
+                             zp_in=a["zp_in"], zp_out=a["zp_out"],
+                             hpad=None if hpad is None else tuple(hpad),
+                             interpret=ctx.interpret)
     return qdwconv2d(x, a["weight_q"], a["stride"], a["mult"], a["zp_in"],
-                     a["zp_out"], hpad=a.get("pex_pads"))
+                     a["zp_out"], hpad=hpad)
 
 
 @register_lowering("qmaxpool")

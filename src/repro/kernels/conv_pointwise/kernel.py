@@ -46,6 +46,14 @@ def conv1x1_pallas(x: jax.Array, w: jax.Array,
                    block_rows: int = 256,
                    interpret: bool = False) -> jax.Array:
     """x [H,W,Cin]; w [Cin,Cout]; b [Cout] (None = zeros) -> [H,W,Cout]."""
+    if not jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+        # the final ``y.astype(o_ref.dtype)`` would silently TRUNCATE the
+        # f32 accumulator back to an integer dtype instead of requantizing
+        # — int8 convs must go through kernels/conv_quant (fused requant)
+        raise TypeError(
+            f"conv1x1_pallas is the float kernel (got x dtype "
+            f"{jnp.asarray(x).dtype}); quantized convs route through "
+            f"repro.kernels.qconv_fused, which requantizes exactly")
     H, W, Cin = x.shape
     Cout = w.shape[1]
     if b is None:

@@ -1,0 +1,5 @@
+from .kernel import qconv1x1_pallas, qconv_pallas, qdwconv_pallas
+from .ops import qconv_fused, qdwconv_fused
+
+__all__ = ["qconv1x1_pallas", "qconv_pallas", "qdwconv_pallas",
+           "qconv_fused", "qdwconv_fused"]

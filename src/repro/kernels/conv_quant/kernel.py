@@ -1,0 +1,223 @@
+"""Fused int8 conv/dwconv + requantize + ReLU Pallas kernels.
+
+The quantized q-ops in ``graphs/cnn_ops.py`` lower to
+``lax.conv_general_dilated`` over int32, which XLA CPU executes as a naive
+convolution loop — the dominant cost of the compiled executor's warm path
+(DESIGN.md §7).  These kernels recast each q-op as the int32 matmul /
+shifted multiply-accumulate it really is and fuse the whole op — zero-point
+subtract, int32 accumulate, round-half-even requantize, zero-point-clamped
+ReLU — into one pass over output row tiles, so the int32 accumulator never
+round-trips through memory between the three stages:
+
+* ``qconv1x1_pallas`` — the MobileNet-dominant case: x viewed as
+  (H·W, Cin) int8 against w (Cin, Cout), a 1-D grid over row blocks with
+  one int32 MXU contraction per tile;
+* ``qconv_pallas`` — general k×k/stride: the padded input is VMEM-resident
+  per step (MCU-sized by construction) and each output row tile accumulates
+  k² shifted (rows, Cin) @ (Cin, Cout) int32 contractions;
+* ``qdwconv_pallas`` — depthwise: k² shifted elementwise int32
+  multiply-accumulates over the channel lane.
+
+Numerics contract (unlike the f32 ``conv_pointwise`` kernel's float
+tolerance): **bit-identical** to ``qconv2d``/``qdwconv2d``.  Integer
+accumulation is exact and order-independent, so regrouping the convolution
+into matmuls cannot change the int32 sums; the fused requantize then applies
+literally the same element-wise sequence as ``cnn_ops.requantize`` —
+``round(acc.astype(f32) * f32(mult)) + zp_out``, clip to [zp_out, 127],
+cast to int8 — and element-wise f32 ops are deterministic regardless of
+fusion context.  Property-tested against the q-op semantics in
+``tests/test_qkernels.py``.
+
+SAME padding is materialised outside the kernel by padding with ``zp_in``
+(those entries become 0 after the in-kernel zero-point subtract, exactly the
+pad-after-subtract formulation of ``qconv2d``); explicit ``hpad`` carries a
+Pex slice's halo padding the same way.  Row padding up to the block size is
+dead compute sliced off after, never dead loads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+INT8_MAX = 127
+
+
+def _require_int8(name: str, arr) -> None:
+    if arr.dtype != jnp.int8:
+        raise TypeError(
+            f"{name} must be int8 for the fused quantized kernels, got "
+            f"{arr.dtype}; float convs go through conv_pointwise instead")
+
+
+def _requant(acc, mult: float, zp_out: int, lo: int):
+    # Must stay literally the element-wise sequence of cnn_ops.requantize:
+    # any deviation (fma, different rounding) breaks the bit-identity
+    # contract with the interpreter.
+    y = jnp.round(acc.astype(jnp.float32) * jnp.float32(mult)) + zp_out
+    return jnp.clip(y, lo, INT8_MAX).astype(jnp.int8)
+
+
+# ------------------------------------------------------------- 1x1 pointwise
+def _qconv1x1_kernel(x_ref, w_ref, o_ref, *, mult: float, zp_in: int,
+                     zp_out: int, lo: int):
+    xi = x_ref[...].astype(jnp.int32) - zp_in     # [bm, Cin]
+    wi = w_ref[...].astype(jnp.int32)             # [Cin, Cout]
+    acc = lax.dot_general(xi, wi, (((1,), (0,)), ((), ())),
+                          preferred_element_type=jnp.int32)
+    o_ref[...] = _requant(acc, mult, zp_out, lo)
+
+
+def qconv1x1_pallas(x: jax.Array, w: jax.Array, *, mult: float, zp_in: int,
+                    zp_out: int, lo: Optional[int] = None,
+                    block_rows: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """x [H,W,Cin] int8; w [Cin,Cout] int8 -> [H,W,Cout] int8.
+
+    The stride-1 1×1 case of ``qconv2d`` (no spatial window, no padding):
+    one fused int32 matmul + requantize over (H·W, Cin) row tiles.  ``lo``
+    is the lower clamp (default ``zp_out``: fused ReLU, as in ``qconv2d``).
+    """
+    _require_int8("x", x)
+    _require_int8("w", w)
+    H, W, Cin = x.shape
+    Cout = w.shape[1]
+    lo = zp_out if lo is None else lo
+    M = H * W
+    bm = min(block_rows, M)
+    pad = (-M) % bm
+    xm = x.reshape(M, Cin)
+    if pad:     # zp_in rows: dead compute, sliced off below
+        xm = jnp.concatenate(
+            [xm, jnp.full((pad, Cin), zp_in, jnp.int8)], axis=0)
+    out = pl.pallas_call(
+        functools.partial(_qconv1x1_kernel, mult=mult, zp_in=zp_in,
+                          zp_out=zp_out, lo=lo),
+        grid=((M + pad) // bm,),
+        in_specs=[pl.BlockSpec((bm, Cin), lambda i: (i, 0)),
+                  pl.BlockSpec((Cin, Cout), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bm, Cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M + pad, Cout), jnp.int8),
+        interpret=interpret,
+    )(xm, w)
+    return out[:M].reshape(H, W, Cout)
+
+
+# ------------------------------------------------------- k×k conv / dwconv
+def _pad_for_blocks(x, k: int, stride: int, hpad: Tuple[int, int],
+                    wpad: Tuple[int, int], zp_in: int, oh: int, ow: int,
+                    bm: int) -> jax.Array:
+    """Materialise SAME/halo padding with ``zp_in`` and extend the bottom so
+    every grid step's input window is in bounds (extra rows feed the dead
+    output rows of the last partial block)."""
+    H, W, _ = x.shape
+    nblk = -(-oh // bm)                     # ceil
+    span_h = (nblk * bm - 1) * stride + k   # rows reachable by any step
+    bottom = max(span_h - (H + hpad[0]), 0)
+    wp_hi = max((ow - 1) * stride + k - (W + wpad[0]), 0)
+    return jnp.pad(x, ((hpad[0], bottom), (wpad[0], wp_hi), (0, 0)),
+                   constant_values=jnp.int8(zp_in))
+
+
+def _qconv_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int, mult: float,
+                  zp_in: int, zp_out: int, lo: int, bm: int, ow: int):
+    base = pl.program_id(0) * (bm * stride)
+    span = (bm - 1) * stride + k
+    xs = pl.load(x_ref, (pl.dslice(base, span), slice(None), slice(None)))
+    xi = xs.astype(jnp.int32) - zp_in             # [span, Wp, Cin]
+    wi = w_ref[...].astype(jnp.int32)             # [k, k, Cin, Cout]
+    cin, cout = wi.shape[2], wi.shape[3]
+    acc = jnp.zeros((bm * ow, cout), jnp.int32)
+    for dy in range(k):
+        for dx in range(k):
+            win = xi[dy:dy + (bm - 1) * stride + 1:stride,
+                     dx:dx + (ow - 1) * stride + 1:stride, :]
+            acc += lax.dot_general(win.reshape(bm * ow, cin), wi[dy, dx],
+                                   (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+    o_ref[...] = _requant(acc, mult, zp_out, lo).reshape(bm, ow, cout)
+
+
+def _qdwconv_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int, mult: float,
+                    zp_in: int, zp_out: int, lo: int, bm: int, ow: int):
+    base = pl.program_id(0) * (bm * stride)
+    span = (bm - 1) * stride + k
+    xs = pl.load(x_ref, (pl.dslice(base, span), slice(None), slice(None)))
+    xi = xs.astype(jnp.int32) - zp_in             # [span, Wp, C]
+    wi = w_ref[...].astype(jnp.int32)             # [k, k, C]
+    acc = jnp.zeros((bm, ow, wi.shape[2]), jnp.int32)
+    for dy in range(k):
+        for dx in range(k):
+            win = xi[dy:dy + (bm - 1) * stride + 1:stride,
+                     dx:dx + (ow - 1) * stride + 1:stride, :]
+            acc += win * wi[dy, dx][None, None, :]
+    o_ref[...] = _requant(acc, mult, zp_out, lo)
+
+
+def _windowed_call(kernel_body, x, w, w_shape, cout: int, *, k: int,
+                   stride: int, mult: float, zp_in: int, zp_out: int,
+                   lo: int, hpad: Tuple[int, int], wpad: Tuple[int, int],
+                   block_rows: int, interpret: bool) -> jax.Array:
+    H, W, _ = x.shape
+    oh = (H + hpad[0] + hpad[1] - k) // stride + 1
+    ow = (W + wpad[0] + wpad[1] - k) // stride + 1
+    bm = min(block_rows, oh)
+    nblk = -(-oh // bm)
+    xp = _pad_for_blocks(x, k, stride, hpad, wpad, zp_in, oh, ow, bm)
+    Hp, Wp, Cl = xp.shape
+    out = pl.pallas_call(
+        functools.partial(kernel_body, k=k, stride=stride, mult=mult,
+                          zp_in=zp_in, zp_out=zp_out, lo=lo, bm=bm, ow=ow),
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((Hp, Wp, Cl), lambda i: (0, 0, 0)),
+                  pl.BlockSpec(w_shape, lambda i: (0,) * len(w_shape))],
+        out_specs=pl.BlockSpec((bm, ow, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk * bm, ow, cout), jnp.int8),
+        interpret=interpret,
+    )(xp, w)
+    return out[:oh]
+
+
+def qconv_pallas(x: jax.Array, w: jax.Array, *, stride: int, mult: float,
+                 zp_in: int, zp_out: int, lo: Optional[int] = None,
+                 hpad: Optional[Tuple[int, int]] = None,
+                 wpad: Tuple[int, int] = (0, 0),
+                 block_rows: int = 128, interpret: bool = False) -> jax.Array:
+    """x [H,W,Cin] int8; w [k,k,Cin,Cout] int8 -> [OH,OW,Cout] int8.
+
+    General k×k/stride quantized conv with fused requantize + ReLU
+    (``lo`` defaults to ``zp_out``).  ``hpad``/``wpad`` are the explicit
+    (before, after) paddings — pass the SAME pads for a whole op, a Pex
+    slice's halo pads for a partial run.  Bit-identical to ``qconv2d``.
+    """
+    _require_int8("x", x)
+    _require_int8("w", w)
+    k = w.shape[0]
+    hpad = (0, 0) if hpad is None else tuple(hpad)
+    return _windowed_call(
+        _qconv_kernel, x, w, tuple(w.shape), w.shape[3], k=k, stride=stride,
+        mult=mult, zp_in=zp_in, zp_out=zp_out,
+        lo=zp_out if lo is None else lo, hpad=hpad, wpad=tuple(wpad),
+        block_rows=block_rows, interpret=interpret)
+
+
+def qdwconv_pallas(x: jax.Array, w: jax.Array, *, stride: int, mult: float,
+                   zp_in: int, zp_out: int, lo: Optional[int] = None,
+                   hpad: Optional[Tuple[int, int]] = None,
+                   wpad: Tuple[int, int] = (0, 0),
+                   block_rows: int = 128,
+                   interpret: bool = False) -> jax.Array:
+    """x [H,W,C] int8; w [k,k,C] int8 -> [OH,OW,C] int8 (depthwise)."""
+    _require_int8("x", x)
+    _require_int8("w", w)
+    k = w.shape[0]
+    hpad = (0, 0) if hpad is None else tuple(hpad)
+    return _windowed_call(
+        _qdwconv_kernel, x, w, tuple(w.shape), w.shape[2], k=k,
+        stride=stride, mult=mult, zp_in=zp_in, zp_out=zp_out,
+        lo=zp_out if lo is None else lo, hpad=hpad, wpad=tuple(wpad),
+        block_rows=block_rows, interpret=interpret)

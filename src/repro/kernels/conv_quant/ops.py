@@ -1,0 +1,65 @@
+"""Jitted public wrappers for the fused int8 kernels, mirroring the q-op
+semantics signatures (``qconv2d``/``qdwconv2d``): SAME padding by default,
+``hpad`` overriding the height pads for Pex slices, weights in the graph's
+``(k, k, Cin, Cout)`` / ``(k, k, Cin, 1)`` layouts.  On CPU the kernels run
+in interpret mode (lowering to int32 dot_generals — the entire speedup over
+XLA's naive int32 convs); on TPU they compile to Mosaic."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partition import same_pads
+
+from .kernel import qconv1x1_pallas, qconv_pallas, qdwconv_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pads(n: int, k: int, stride: int) -> Tuple[int, int]:
+    _, beg, end = same_pads(n, k, stride)
+    return beg, end
+
+
+@partial(jax.jit, static_argnames=("stride", "mult", "zp_in", "zp_out",
+                                   "hpad", "block_rows", "interpret"))
+def qconv_fused(x, w, *, stride: int, mult: float, zp_in: int, zp_out: int,
+                hpad: Optional[Tuple[int, int]] = None,
+                block_rows: Optional[int] = None,
+                interpret: Optional[bool] = None):
+    """Fused-kernel drop-in for ``qconv2d`` — bit-identical outputs."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    k = w.shape[0]
+    if k == 1 and stride == 1 and hpad in (None, (0, 0)):
+        return qconv1x1_pallas(
+            x, jnp.reshape(w, w.shape[2:]), mult=mult, zp_in=zp_in,
+            zp_out=zp_out, block_rows=block_rows or 256, interpret=interpret)
+    hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
+    wp = _pads(x.shape[1], k, stride)
+    return qconv_pallas(x, w, stride=stride, mult=mult, zp_in=zp_in,
+                        zp_out=zp_out, hpad=hp, wpad=wp,
+                        block_rows=block_rows or 128, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("stride", "mult", "zp_in", "zp_out",
+                                   "hpad", "block_rows", "interpret"))
+def qdwconv_fused(x, w, *, stride: int, mult: float, zp_in: int, zp_out: int,
+                  hpad: Optional[Tuple[int, int]] = None,
+                  block_rows: Optional[int] = None,
+                  interpret: Optional[bool] = None):
+    """Fused-kernel drop-in for ``qdwconv2d`` — bit-identical outputs."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    k = w.shape[0]
+    hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
+    wp = _pads(x.shape[1], k, stride)
+    wc = jnp.reshape(w, (k, w.shape[1], x.shape[-1]))   # (k,k,Cin,1)->(k,k,C)
+    return qdwconv_pallas(x, wc, stride=stride, mult=mult, zp_in=zp_in,
+                          zp_out=zp_out, hpad=hp, wpad=wp,
+                          block_rows=block_rows or 128, interpret=interpret)

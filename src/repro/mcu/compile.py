@@ -28,7 +28,12 @@ MCUNet pair their planners with a compiled runtime:
   shared accumulator buffer — no copies materialise after XLA's donation;
 * runs of uniform Pex slices are rolled into a ``lax.fori_loop`` whose body
   indexes per-iteration offsets/row-starts from closed-over arrays — the
-  compiled program stays O(segment) in code size instead of O(K · segment).
+  compiled program stays O(segment) in code size instead of O(K · segment);
+* ``pex_ring_read`` windows with a single integer-exact consumer are
+  **zero-copy**: the modular gather fuses into the consumer's computation
+  as an SSA value and the window is never re-materialised in the arena
+  (``zero_copy_rings=True``, see ``_zero_copy_reads`` for the eligibility
+  proof obligations) — in both the straight-line and rolled-loop paths.
 
 Lowering rules are registered per operator ``kind`` next to the semantics
 (``graphs/cnn_ops.py`` registers conv/dwconv/maxpool/add, optionally routing
@@ -201,6 +206,52 @@ def _lower_pex_ring_read(ctx: LoweringCtx, op: Operator, ring):
     return jnp.take(ring, idx, axis=0)
 
 
+# ------------------------------------------------------- zero-copy ring reads
+# A ``pex_ring_read`` gathers a halo'd window out of the ring in row order.
+# Materialising that window into the arena is a pure copy the MCU never
+# needs: the consumer can index the ring directly (the Helium ping-pong
+# buffering model — never re-materialise what the arena already holds).
+# The compiled program fuses the gather into the consumer by keeping the
+# gathered window as an SSA value — no arena write, no barrier between the
+# read and its consumer — when that is provably bit-safe:
+#
+# * the window is integer-typed and the consumer is an integer-exact kind
+#   (int32 accumulation is order-independent and element-wise f32 requant
+#   ops are deterministic under any fusion context, so removing the module
+#   boundary cannot perturb results — unlike f32 convs, which XLA CPU
+#   compiles context-sensitively);
+# * the read's output has exactly one consumer, scheduled immediately after
+#   it in the same Pex slice group (true by construction for the cascade
+#   rewrite's ``cpexrd__*`` reads), and is not a graph output.
+#
+# The arena plan is untouched: the window keeps its placement (the memory
+# model still charges it — the liveness story is unchanged), the compiled
+# program just never writes it.
+_ZERO_COPY_KINDS = frozenset({"qconv", "qdwconv", "qmaxpool"})
+_INT_DTYPES = frozenset({"int8", "uint8", "int16", "int32"})
+
+
+def _zero_copy_reads(graph: Graph, sched: Sequence[Operator]) -> set:
+    """Tensor names of ring-read windows to keep as SSA values."""
+    outs = set(graph.outputs)
+    fused = set()
+    for idx in range(len(sched) - 1):
+        op, nxt = sched[idx], sched[idx + 1]
+        if op.kind != "pex_ring_read" or "pex_ring_src" not in op.attrs:
+            continue
+        name = op.output
+        if name in outs or graph.tensors[name].dtype not in _INT_DTYPES:
+            continue
+        cons = graph.consumers(name)
+        if (len(cons) == 1 and cons[0].name == nxt.name
+                and nxt.kind in _ZERO_COPY_KINDS
+                and op.attrs.get("pex_seg") == nxt.attrs.get("pex_seg")
+                and op.attrs.get("pex_slice_idx")
+                == nxt.attrs.get("pex_slice_idx")):
+            fused.add(name)
+    return fused
+
+
 # ------------------------------------------------------- pex fori_loop rolling
 def _roll_key(ctx: LoweringCtx, op: Operator):
     """Hashable description of what an op *computes* (not where its tensors
@@ -257,6 +308,8 @@ class _Template:
     ring_dst: Optional[Any] = None    # pex_ring_push: dst row per iteration
     ring_src: Optional[Any] = None    # pex_ring_read: src row per iteration
     ring_rows: int = 0                # ring size (rows); static per template
+    defer: bool = False               # zero-copy: keep output as SSA value
+    fused_in: Optional[Tuple[int, int]] = None   # (input j, source template)
 
 
 @dataclasses.dataclass
@@ -281,11 +334,14 @@ def _slice_groups(sched: Sequence[Operator]):
 
 
 def _build_loop(ctx: LoweringCtx, offsets: Dict[str, Tuple[int, int]],
-                run: List[List[Operator]]) -> Optional[_RolledLoop]:
+                run: List[List[Operator]],
+                zero_copy: frozenset = frozenset()
+                ) -> Optional[_RolledLoop]:
     """Merge ≥2 structurally-identical slice groups into one fori_loop.
     Returns None when any operand breaks the uniformity conditions."""
     n = len(run)
     templates: List[_Template] = []
+    out_names: List[List[str]] = []
     for d in range(len(run[0])):
         ops = [g[d] for g in run]
         rep = ops[0]
@@ -329,11 +385,27 @@ def _build_loop(ctx: LoweringCtx, offsets: Dict[str, Tuple[int, int]],
                                         for o in ops], jnp.int32)
             tpl.ring_rows = rep.attrs["pex_ring_rows"]
         templates.append(tpl)
+        out_names.append(onames)
+    # zero-copy ring reads inside the rolled body: a deferred template's
+    # per-iteration outputs flow straight into the next template's matching
+    # input instead of round-tripping through the arena
+    for d in range(len(templates) - 1):
+        if templates[d].op.kind != "pex_ring_read":
+            continue
+        if not all(nm in zero_copy for nm in out_names[d]):
+            continue
+        nxt_ops = [g[d + 1] for g in run]
+        for j in range(len(nxt_ops[0].inputs)):
+            if [o.inputs[j] for o in nxt_ops] == out_names[d]:
+                templates[d].defer = True
+                templates[d + 1].fused_in = (j, d)
+                break
     return _RolledLoop(templates, n)
 
 
 def _plan_items(ctx: LoweringCtx, offsets: Dict[str, Tuple[int, int]],
-                sched: Sequence[Operator], roll_loops: bool) -> List[Any]:
+                sched: Sequence[Operator], roll_loops: bool,
+                zero_copy: frozenset = frozenset()) -> List[Any]:
     """The compiled program structure: a list of Operators (straight-line
     steps) and _RolledLoops."""
     if not roll_loops:
@@ -359,7 +431,8 @@ def _plan_items(ctx: LoweringCtx, offsets: Dict[str, Tuple[int, int]],
                 break
             run.append(ops2)
             j += 1
-        loop = _build_loop(ctx, offsets, run) if len(run) >= 2 else None
+        loop = (_build_loop(ctx, offsets, run, zero_copy)
+                if len(run) >= 2 else None)
         if loop is None:
             items.extend(ops)
             i += 1
@@ -392,6 +465,7 @@ class CompiledExecutor:
     rolled_ops: int
     steps: int
     offsets: Dict[str, Tuple[int, int]]    # tensor -> (byte offset, bytes)
+    zero_copy_reads: int = 0    # ring windows fused into their consumers
 
     def _offsets(self, tensor: str) -> Tuple[int, int]:
         return self.offsets[tensor]
@@ -451,6 +525,7 @@ def compile_schedule(graph: Graph,
                      use_pallas: bool = False,
                      interpret: Optional[bool] = None,
                      roll_loops: bool = True,
+                     zero_copy_rings: bool = True,
                      fuse: bool = False,
                      donate: bool = True) -> CompiledExecutor:
     """Lower ``schedule`` (default: the graph's embedded order) against
@@ -463,7 +538,13 @@ def compile_schedule(graph: Graph,
     dispatch — an MCU runtime materialises each output into the arena the
     same way — which keeps compiled outputs bit-identical to the
     interpreter.  ``fuse=True`` lets XLA fuse across operators: fastest,
-    but float results may drift within accumulation tolerance."""
+    but float results may drift within accumulation tolerance.
+
+    ``zero_copy_rings=True`` (default) fuses each eligible
+    ``pex_ring_read``'s window gather into its consumer instead of
+    materialising the window in the arena — bit-safe by construction (only
+    integer-exact consumers qualify; see ``_zero_copy_reads``) and a pure
+    win: one fewer copy and barrier per streamed slice."""
     sched = list(schedule) if schedule is not None else graph.default_schedule()
     if not graph.is_valid_schedule(sched):
         raise ValueError("invalid schedule for this graph")
@@ -482,7 +563,9 @@ def compile_schedule(graph: Graph,
                     f"ArenaPlanner.plan(..., alignment=None) so offsets "
                     f"are aligned to the widest itemsize")
     ctx = LoweringCtx(graph, use_pallas=use_pallas, interpret=interpret)
-    items = _plan_items(ctx, offsets, sched, roll_loops)
+    zc = (frozenset(_zero_copy_reads(graph, sched)) if zero_copy_rings
+          else frozenset())
+    items = _plan_items(ctx, offsets, sched, roll_loops, zc)
 
     def read(arena, name: str):
         off, size = offsets[name]
@@ -507,15 +590,24 @@ def compile_schedule(graph: Graph,
     def barrier(arena):
         return arena if fuse else lax.optimization_barrier(arena)
 
-    def step(arena, op: Operator):
-        args = [read(arena, i) for i in op.inputs]
-        return barrier(write(arena, op.output, lower_op(ctx, op, *args)))
+    def step(arena, op: Operator, pending: Dict[str, Any]):
+        args = [pending.pop(i) if i in pending else read(arena, i)
+                for i in op.inputs]
+        val = lower_op(ctx, op, *args)
+        if op.output in zc:       # zero-copy: flows straight to the consumer
+            pending[op.output] = val
+            return arena
+        return barrier(write(arena, op.output, val))
 
     def loop_step(arena, loop: _RolledLoop):
         def body(i, arena):
-            for tpl in loop.templates:
+            deferred: Dict[int, Any] = {}
+            for t_i, tpl in enumerate(loop.templates):
                 args = []
-                for slot in tpl.in_slots:
+                for j, slot in enumerate(tpl.in_slots):
+                    if tpl.fused_in is not None and j == tpl.fused_in[0]:
+                        args.append(deferred.pop(tpl.fused_in[1]))
+                        continue
                     if slot.static:
                         raw = arena[slot.offset:slot.offset + slot.size]
                     else:
@@ -550,6 +642,9 @@ def compile_schedule(graph: Graph,
                     out = jnp.take(ring, rows, axis=0)
                 else:
                     out = lower_op(ctx, op, *args)
+                if tpl.defer:     # zero-copy: no arena write, no barrier
+                    deferred[t_i] = out
+                    continue
                 want = jnp.dtype(_JNP_DTYPES[tpl.out_slot.dtype])
                 if jnp.asarray(out).dtype != want:
                     raise ValueError(
@@ -568,11 +663,12 @@ def compile_schedule(graph: Graph,
         return lax.fori_loop(0, loop.n, body, arena)
 
     def raw_fn(arena):
+        pending: Dict[str, Any] = {}
         for item in items:
             if isinstance(item, _RolledLoop):
                 arena = loop_step(arena, item)
             else:
-                arena = step(arena, item)
+                arena = step(arena, item, pending)
         return arena
 
     fn = jax.jit(raw_fn, donate_argnums=0) if donate else jax.jit(raw_fn)
@@ -583,4 +679,4 @@ def compile_schedule(graph: Graph,
         raw_fn=raw_fn, fn=fn,
         rolled_loops=len(loops),
         rolled_ops=sum(lp.n * len(lp.templates) for lp in loops),
-        steps=len(sched), offsets=offsets)
+        steps=len(sched), offsets=offsets, zero_copy_reads=len(zc))

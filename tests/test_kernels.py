@@ -120,3 +120,14 @@ def test_conv1x1_fused_matches_ref(H, W, Cin, Cout, block_rows, bias, relu):
     want = conv1x1_ref(x, w, b, relu=relu)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int32])
+def test_conv1x1_fused_rejects_integer_input(dtype):
+    """Regression: the float kernel's final ``astype(o_ref.dtype)`` would
+    silently TRUNCATE the f32 accumulator on integer inputs instead of
+    requantizing — it must refuse and point at the fused int8 kernels."""
+    x = jnp.zeros((4, 4, 8), dtype)
+    w = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(TypeError, match="qconv_fused"):
+        conv1x1_fused(x, w, interpret=True)
