@@ -42,7 +42,7 @@ import time
 
 import numpy as np
 
-from repro.core import ArenaPlanner, schedule
+import repro.deploy as deploy
 from repro.graphs import (figure1_executable_graph, figure1_int8_graph,
                           graph_dtypes, mobilenet_v1_graph, quantize_graph,
                           random_input)
@@ -54,10 +54,10 @@ _SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
 
 
 def _case(report, name, g, cap=None, repeats=3):
-    res = schedule(g, arena_budget=cap)
-    gp = res.graph if res.graph is not None else g
-    plan = ArenaPlanner.plan(gp, res.schedule)
-    ArenaPlanner.validate(plan, gp)
+    # the facade runs schedule -> plan -> validate -> compile in one call
+    d = deploy.build(g, arena_budget=cap)
+    res, plan = d.schedule_result, d.plan
+    gp = d.exec_graph
     x = random_input(g)
     dtypes = graph_dtypes(g)
 
@@ -69,11 +69,10 @@ def _case(report, name, g, cap=None, repeats=3):
     rep = interp.run(x, schedule=res.schedule)
     interp_warm_us = (time.perf_counter() - t0) * 1e6
 
-    ex = compile_schedule(gp, res.schedule, plan)
-    out = ex.run(x)                      # warm-up: traces + compiles
+    out = d.run(x)                       # warm-up: traces + compiles
     t0 = time.perf_counter()
     for _ in range(repeats):
-        out = ex.run(x)
+        out = d.run(x)
     compiled_us = (time.perf_counter() - t0) * 1e6 / repeats
 
     for o in g.outputs:                  # the executor must not drift
@@ -98,14 +97,12 @@ def _pallas_case(report, name, g, cap=None, repeats=3, base_repeats=1):
     invariant (the kernels change lowering only, never placement).  The
     default side runs ``base_repeats`` times — it is the slow side by two
     orders of magnitude on conv-heavy int8 graphs."""
-    res = schedule(g, arena_budget=cap)
-    gp = res.graph if res.graph is not None else g
-    plan = ArenaPlanner.plan(gp, res.schedule)
-    ArenaPlanner.validate(plan, gp)
+    d = deploy.build(g, arena_budget=cap)
+    gp, plan = d.exec_graph, d.plan
     x = random_input(g)
 
-    base = compile_schedule(gp, res.schedule, plan)
-    fused = compile_schedule(gp, res.schedule, plan, use_pallas=True)
+    base = d.executor
+    fused = compile_schedule(gp, d.schedule, plan, use_pallas=True)
     assert fused.arena_size == base.arena_size == plan.arena_size
 
     out_base = base.run(x)               # warm-up: traces + compiles

@@ -1,0 +1,155 @@
+"""Serving throughput: requests/s at measured p50/p99 latency, single-device
+micro-batching vs the sharded continuous-batching engine.
+
+The comparison is **weak scaling at fixed per-replica lanes**: the
+single-device ``GraphServingEngine`` dispatches ``lanes`` vmap lanes per
+XLA call; the ``ShardedServingEngine`` dispatches ``replicas x lanes``
+lanes per call across a replica mesh of forced host devices
+(``--xla_force_host_platform_device_count``, SNIPPETS.md Snippets 2-3).
+Per-dispatch work per replica is identical, so with >= ``replicas`` real
+cores the sharded engine's requests/s scales with the mesh while per
+-request p50/p99 stays at single-device levels; on fewer cores the
+replicas time-share and the ratio honestly degrades (the row still
+reports it).  Output rows:
+
+    serving.<case>.single_rps    us = us/request, derived = requests/s
+    serving.<case>.sharded_rps   us = us/request, derived = requests/s
+    serving.<case>.speedup_x     derived = sharded / single requests/s
+
+The ``*_rps`` rows carry ``requests_per_s`` (floor-gated by
+``benchmarks/compare.py --rps-tol``), ``p50_ms``/``p99_ms``, and the
+deterministic ``arena_bytes`` of the deployment (strict bytes gate).
+Outputs are checked bit-identical to one-shot ``Deployment.run`` before
+any timing is reported.
+
+The whole benchmark runs in a fresh subprocess: the replica mesh only
+exists if XLA_FLAGS is set before the first jax import, which the parent
+(run.py) process has long since done.  ``REPRO_SERVING_DEVICES`` sets the
+mesh size (default 4; the CI smoke row uses 2).
+
+Smoke mode (REPRO_BENCH_SMOKE=1): MobileNet-0.25@96 int8 only.  Full mode
+adds the headline MobileNet-1.0@192 int8 deployment and, when the host
+has at least ``replicas`` cores, asserts the >=2x scale-out bar.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+_SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+_ROW_TAG = "SERVINGROW "
+
+
+# --------------------------------------------------------- subprocess side
+def _bench_case(case: str, graph, qmodel, *, replicas: int, lanes: int,
+                n_requests: int, use_pallas: bool):
+    import numpy as np
+
+    import repro.deploy as deploy
+    from repro.graphs import random_input
+    from repro.serving import GraphServingEngine, ShardedServingEngine
+
+    d = deploy.build(qmodel.graph if qmodel else graph,
+                     use_pallas=use_pallas)
+    reqs = [random_input(graph, seed=i) for i in range(n_requests)]
+    if qmodel:
+        reqs = [qmodel.quantize_inputs(r) for r in reqs]
+    outs = graph.outputs if qmodel is None else qmodel.graph.outputs
+    refs = [d.run(reqs[0]), d.run(reqs[-1])]   # bit-identity anchors
+
+    def check(results):
+        for got, ref in ((results[0], refs[0]), (results[-1], refs[1])):
+            for t in outs:
+                np.testing.assert_array_equal(ref[t], got[t])
+
+    single = GraphServingEngine(deployment=d, micro_batch=lanes)
+    single.serve(reqs[:2 * lanes])             # warm: compiles jit(vmap)
+    check(single.serve(reqs))
+    s = single.stats
+
+    sharded = ShardedServingEngine(d, replicas=replicas, lanes=lanes)
+    sharded.serve(reqs[:2 * sharded.capacity])  # warm: compiles pmap(vmap)
+    check(sharded.serve(reqs))
+    h = sharded.stats
+
+    meta = dict(arena_bytes=d.arena_bytes, dtypes="int8")
+
+    def row(name, us, derived, **extra):
+        print(_ROW_TAG + json.dumps(
+            {"name": name, "us": us, "derived": derived,
+             "meta": {**meta, **extra}}))
+
+    row(f"serving.{case}.single_rps", s.us_per_request,
+        round(s.requests_per_s, 1), requests_per_s=round(s.requests_per_s, 2),
+        p50_ms=round(s.p50_ms, 2), p99_ms=round(s.p99_ms, 2))
+    row(f"serving.{case}.sharded_rps", h.us_per_request,
+        round(h.requests_per_s, 1), requests_per_s=round(h.requests_per_s, 2),
+        p50_ms=round(h.p50_ms, 2), p99_ms=round(h.p99_ms, 2),
+        replicas=h.replicas)
+    speedup = h.requests_per_s / s.requests_per_s if s.requests_per_s else 0.0
+    row(f"serving.{case}.speedup_x", h.us_per_request, round(speedup, 2))
+    return speedup
+
+
+def _main():
+    replicas = int(os.environ.get("REPRO_SERVING_DEVICES", "4"))
+    import jax
+
+    from repro.graphs import mobilenet_v1_graph, quantize_graph, random_input
+
+    have = jax.local_device_count()
+    if have < replicas:
+        raise SystemExit(f"forced host mesh missing: {have} devices, "
+                         f"wanted {replicas} (XLA_FLAGS not set pre-init?)")
+
+    g = mobilenet_v1_graph()                  # 0.25@96
+    q = quantize_graph(g, random_input(g))
+    t0 = time.time()
+    _bench_case("mobilenet_025_96_int8", g, q, replicas=replicas,
+                lanes=2, n_requests=8 * replicas, use_pallas=True)
+    print(f"# smoke case done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if _SMOKE:
+        return
+    g = mobilenet_v1_graph(alpha=1.0, resolution=192)
+    q = quantize_graph(g, random_input(g))
+    speedup = _bench_case("mobilenet_100_192_int8", g, q,
+                          replicas=replicas, lanes=2,
+                          n_requests=4 * replicas, use_pallas=True)
+    # the scale-out bar is physical: replicas can only run concurrently
+    # on >= that many cores.  Time-shared hosts report, but don't gate.
+    if (os.cpu_count() or 1) >= replicas:
+        assert speedup >= 2.0, (
+            f"sharded engine only {speedup:.2f}x over single-device "
+            f"({replicas} replicas on {os.cpu_count()} cores)")
+
+
+# ------------------------------------------------------------- parent side
+def run(report):
+    """Spawn the benchmark in a fresh process with the replica mesh forced
+    (2 devices in smoke mode, 4 otherwise), and re-report its rows."""
+    env = dict(os.environ)
+    env.setdefault("REPRO_SERVING_DEVICES", "2" if _SMOKE else "4")
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = (os.path.abspath(src) + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-m", "benchmarks.bench_serving"],
+                          capture_output=True, text=True, env=env)
+    for line in proc.stdout.splitlines():
+        if line.startswith(_ROW_TAG):
+            r = json.loads(line[len(_ROW_TAG):])
+            report(r["name"], r["us"], r["derived"], **r["meta"])
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"serving subprocess failed:\n{proc.stdout}\n{proc.stderr}")
+
+
+if __name__ == "__main__":
+    # the mesh must be forced before jax initialises; repro.serving is
+    # import-safe (lazy submodules) so this works pre-jax
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                    "src"))
+    from repro.serving import force_host_devices
+
+    force_host_devices(int(os.environ.get("REPRO_SERVING_DEVICES", "4")))
+    _main()

@@ -13,6 +13,12 @@ Three gates, per row name present in both files:
   ``--us-tol`` (default 20%) plus an absolute ``--us-slack`` grace
   (default 5000 us) that absorbs shared-runner jitter on sub-millisecond
   rows.
+* **throughput (tolerant floor)** — rows carrying ``requests_per_s``
+  (the serving engine benchmark) may not drop below ``baseline *
+  (1 - --rps-tol)`` (default 0.5 = half the committed floor; serving
+  throughput on shared runners is noisier than single-dispatch us/call).
+  Like the bytes gate, a fresh row that *loses* its throughput figure
+  fails rather than silently leaving the gate.
 * **Pareto (exact, strict)** — rows carrying a ``pareto`` front (a sorted
   list of ``[extra_macs, peak_bytes]`` pairs from the joint solver) must
   *cover* the baseline front: every baseline point must be matched or
@@ -66,6 +72,7 @@ def compare_rows(
     fresh: Dict[str, dict],
     us_tol: float,
     us_slack: float,
+    rps_tol: float = 0.5,
 ) -> Tuple[List[str], List[str]]:
     """(failures, notes) of diffing ``fresh`` against ``base``."""
     failures: List[str] = []
@@ -103,6 +110,19 @@ def compare_rows(
                     f"{name}: us/call regressed {bus:.0f} -> {fus:.0f} "
                     f"(limit {limit:.0f} = baseline +{us_tol:.0%} +{us_slack:.0f}us)"
                 )
+        brps, frps = b.get("requests_per_s"), f.get("requests_per_s")
+        if brps is not None and frps is None:
+            failures.append(
+                f"{name}: requests_per_s lost (baseline has {brps} — "
+                f"the throughput floor gate would be silently disarmed)"
+            )
+        if brps is not None and frps is not None:
+            floor = brps * (1.0 - rps_tol)
+            if frps < floor:
+                failures.append(
+                    f"{name}: requests/s fell {brps:.1f} -> {frps:.1f} "
+                    f"(floor {floor:.1f} = baseline -{rps_tol:.0%})"
+                )
         if b.get("dtypes") and f.get("dtypes") and b["dtypes"] != f["dtypes"]:
             notes.append(f"{name}: dtypes changed {b['dtypes']} -> {f['dtypes']}")
     for name in sorted(set(fresh) - set(base)):
@@ -130,11 +150,19 @@ def main(argv=None) -> int:
         default=5000.0,
         help="absolute us/call grace for runner jitter (default 5000 us)",
     )
+    ap.add_argument(
+        "--rps-tol",
+        type=float,
+        default=0.5,
+        help="relative requests/s floor tolerance (default 0.5 = may fall "
+        "to half the committed floor before failing)",
+    )
     args = ap.parse_args(argv)
 
     base, _ = load_rows(args.baseline)
     fresh, fresh_payload = load_rows(args.fresh)
-    failures, notes = compare_rows(base, fresh, args.us_tol, args.us_slack)
+    failures, notes = compare_rows(base, fresh, args.us_tol, args.us_slack,
+                                   args.rps_tol)
     if fresh_payload.get("failed"):
         failures.append(f"fresh run reported failed benchmarks: {fresh_payload['failed']}")
 

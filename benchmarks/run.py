@@ -90,12 +90,27 @@ def merge_baseline(baseline: dict, fresh_rows: list,
                          f"(--allow-bytes-growth)")
         elif ob != nb:
             notes.append(f"{row['name']}: bytes {ob} -> {nb}")
+        orps, nrps = old.get("requests_per_s"), row.get("requests_per_s")
+        if orps is not None and nrps is None:
+            # same reasoning as arena_bytes: a merge must not silently
+            # disarm the compare.py requests/s floor gate
+            raise SystemExit(
+                f"refusing to merge: {row['name']} lost its requests_per_s "
+                f"(baseline has {orps}); fix the benchmark row before "
+                f"refreshing the baseline")
         ou, nu = old.get("us_per_call"), row.get("us_per_call")
         if ou is not None and nu is not None and nu > ou:
             notes.append(f"{row['name']}: us envelope {ou:.0f} -> {nu:.0f}")
         old.update({k: v for k, v in row.items() if k != "us_per_call"})
         old["us_per_call"] = (max(ou, nu) if ou is not None
                               and nu is not None else nu or ou)
+        if orps is not None and nrps is not None:
+            # floor envelope: the committed figure is the weakest observed
+            # run, so the CI floor gate holds on any reference-class host
+            if nrps < orps:
+                notes.append(f"{row['name']}: requests/s floor "
+                             f"{orps:.1f} -> {nrps:.1f}")
+            old["requests_per_s"] = min(orps, nrps)
     return notes
 
 
@@ -106,7 +121,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names to run "
                          "(figure1,table1,scheduler,jaxpr,pex,executor,"
-                         "kernels,roofline)")
+                         "kernels,roofline,serving)")
     ap.add_argument("--smoke", action="store_true",
                     help="restrict benchmarks to their small-graph subsets")
     ap.add_argument("--pareto-json", metavar="PATH", default=None,
@@ -126,7 +141,7 @@ def main(argv=None) -> None:
 
     from . import (bench_figure1, bench_table1, bench_scheduler,
                    bench_jaxpr, bench_kernels, bench_pex, bench_roofline,
-                   bench_executor)
+                   bench_executor, bench_serving)
 
     by_name = {
         "figure1": bench_figure1,
@@ -137,6 +152,7 @@ def main(argv=None) -> None:
         "executor": bench_executor,
         "kernels": bench_kernels,
         "roofline": bench_roofline,
+        "serving": bench_serving,
     }
     if args.only:
         unknown = [n for n in args.only.split(",") if n not in by_name]
@@ -187,6 +203,11 @@ def main(argv=None) -> None:
             jr["pareto"] = [list(p) for p in meta["pareto"]]
         if meta.get("nodes") is not None:
             jr["nodes"] = meta["nodes"]
+        # serving throughput metadata: requests_per_s enters the
+        # compare.py floor gate; the latency percentiles ride along
+        for k in ("requests_per_s", "p50_ms", "p99_ms", "replicas"):
+            if meta.get(k) is not None:
+                jr[k] = meta[k]
         json_rows.append(jr)
 
     if args.json:

@@ -21,6 +21,7 @@ deployment through the compiled byte-arena executor.
 """
 import numpy as np
 
+import repro.deploy as deploy
 from repro.core import ArenaPlanner, schedule, static_plan_size
 from repro.graphs import (int8_scheduling_graph, mobilenet_v1_graph,
                           quantize_graph, random_input, swiftnet_cell_graph)
@@ -69,10 +70,16 @@ def main():
                for o in g.outputs)
     print(f"  outputs identical across schedules: {same}")
 
-    plan = ArenaPlanner.plan(g, best.schedule)
-    ArenaPlanner.validate(plan, g)
-    print(f"\noffline arena plan (paper §6): {plan.arena_size / 1024:.1f} KB"
+    # the deploy facade runs the same schedule -> plan -> validate ->
+    # compile chain in one call and hands back a runnable Deployment
+    dep = deploy.build(g)
+    out_c = dep.run(x)
+    same = all(np.array_equal(out_opt[o], out_c[o]) for o in g.outputs)
+    print(f"\noffline arena plan (paper §6): "
+          f"{dep.arena_bytes / 1024:.1f} KB"
           f"  (static all-resident: {static_plan_size(g) / 1024:.0f} KB)")
+    print(f"  repro.deploy.build(g).run(x) bit-identical: {same}")
+    print(f"  deployment stats: {dep.stats.as_json()}")
 
     # ---- Act 2: 256 KB part via cascaded Pex streaming -----------------
     print("\n=== MobileNet-1.0@192 int8 on a 256 KB-SRAM part ===")

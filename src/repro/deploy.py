@@ -1,0 +1,159 @@
+"""``repro.deploy`` — the one-call deployment facade.
+
+Every consumer of the paper pipeline used to hand-roll the same four-step
+chain::
+
+    res  = schedule(graph, arena_budget=..., partition=...)
+    g    = res.graph if res.graph is not None else graph
+    plan = ArenaPlanner.plan(g, res.schedule)
+    ArenaPlanner.validate(plan, g)
+    ex   = compile_schedule(g, res.schedule, plan, use_pallas=...)
+
+duplicated (with drift) across the serving engines, the benchmarks, the
+examples and the tests.  ``build()`` is that chain as one call returning a
+``Deployment`` — the documented way to go from a graph to something that
+runs::
+
+    import repro.deploy as deploy
+
+    d = deploy.build(graph, arena_budget=256 * 1024)
+    out = d.run({"input": x})            # one request
+    outs = d.serve(requests)             # micro-batched engine
+    d.stats.arena_bytes                  # typed, not stringly-keyed
+
+The raw ``schedule()``/``ArenaPlanner``/``compile_schedule`` chain stays
+importable and supported — ``build`` adds no semantics on top of it, so
+anything the facade can express the chain can too (and vice versa; the
+facade is for the 95% path).
+
+``quantize=True`` accepts a *float* graph and post-training-quantizes it
+first (``graphs/quantize.py``); the returned deployment carries the
+``QuantizedModel`` so callers can ``d.quantize_inputs(...)`` /
+``d.dequantize_outputs(...)`` at the edges while ``run``/``serve`` keep
+the honest int8 dtype contract inside.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core import ArenaPlanner, schedule as _schedule
+from repro.core.allocator import ArenaPlan
+from repro.core.graph import Graph, Operator
+from repro.core.scheduler import ScheduleResult
+from repro.mcu.compile import CompiledExecutor, compile_schedule
+
+
+@dataclasses.dataclass
+class Deployment:
+    """A graph scheduled, planned, validated and compiled — ready to run.
+
+    ``graph`` is the graph the caller handed in; ``exec_graph`` is the one
+    the schedule's operators belong to (a Pex/cascade rewrite, or the int8
+    rewrite under ``quantize=True`` — the same graph when no rewrite
+    fired).  ``schedule`` is the operator order, ``plan`` the validated
+    arena plan the executor runs against.
+    """
+
+    graph: Graph                          # as passed to build()
+    exec_graph: Graph                     # what the schedule executes
+    schedule_result: ScheduleResult
+    plan: ArenaPlan
+    executor: CompiledExecutor
+    qmodel: Optional[object] = None       # QuantizedModel when quantize=True
+
+    @property
+    def schedule(self) -> List[Operator]:
+        return self.schedule_result.schedule
+
+    @property
+    def arena_bytes(self) -> int:
+        return int(self.plan.arena_size)
+
+    # ------------------------------------------------------------- running
+    def run(self, inputs: Dict[str, Any], as_numpy: bool = True
+            ) -> Dict[str, Any]:
+        """One request through the compiled arena program."""
+        return self.executor.run(inputs, as_numpy=as_numpy)
+
+    def serve(self, requests: Sequence[Dict[str, Any]], *,
+              micro_batch: int = 8) -> List[Dict[str, Any]]:
+        """Micro-batched one-shot serve (single device).  For sharded
+        continuous batching build an engine with ``engine(...)``."""
+        return self.engine(micro_batch=micro_batch).serve(requests)
+
+    def engine(self, *, micro_batch: int = 8, replicas: Optional[int] = None,
+               **kw):
+        """A serving engine over this deployment.  ``replicas=None`` gives
+        the single-device micro-batching ``GraphServingEngine``; any other
+        value the sharded continuous-batching ``ShardedServingEngine``
+        (``replicas=0`` = one replica per visible device)."""
+        if replicas is None:
+            from repro.serving.engine import GraphServingEngine
+            return GraphServingEngine(deployment=self,
+                                      micro_batch=micro_batch, **kw)
+        from repro.serving.sharded import ShardedServingEngine
+        return ShardedServingEngine(self, replicas=replicas or None,
+                                    lanes=micro_batch, **kw)
+
+    # ------------------------------------------------------------- stats
+    @property
+    def stats(self):
+        """Deployment-level ``EngineStats`` (schedule/arena fields; the
+        serve-level fields belong to an engine's ``.stats``)."""
+        from repro.serving.stats import EngineStats
+        return EngineStats(
+            arena_bytes=self.arena_bytes,
+            schedule_peak_bytes=int(self.schedule_result.peak),
+            schedule_method=self.schedule_result.method)
+
+    # --------------------------------------------------- quantized edges
+    def quantize_inputs(self, inputs: Dict[str, Any]) -> Dict[str, Any]:
+        if self.qmodel is None:
+            return inputs
+        return self.qmodel.quantize_inputs(inputs)
+
+    def dequantize_outputs(self, outputs: Dict[str, Any]) -> Dict[str, Any]:
+        if self.qmodel is None:
+            return outputs
+        return self.qmodel.dequantize_outputs(outputs)
+
+
+def build(graph: Graph, *, arena_budget: Optional[int] = None,
+          quantize: bool = False, calibration=None,
+          use_pallas: bool = False, objective: str = "memory",
+          partition: bool = False, macs_cap: Optional[float] = None,
+          fuse: bool = False, **schedule_opts) -> Deployment:
+    """schedule → plan → validate → compile, one call.
+
+    * ``arena_budget`` — target arena bytes; the scheduler escalates
+      reorder → Pex → cascaded streaming until it fits (or returns its
+      best effort — check ``d.arena_bytes``).
+    * ``quantize`` — post-training-quantize a float graph to int8 first
+      (``calibration``: input dict(s); default = deterministic synthetic).
+    * ``use_pallas`` — route int8 convs through the fused Pallas kernels
+      (bit-identical; DESIGN.md §9).
+    * ``objective`` — ``"memory"`` (lowest peak) or ``"latency"``
+      (cheapest in-budget schedule; needs ``arena_budget``).
+    * ``macs_cap`` — max halo-recompute extra-MACs fraction.
+    * extra keyword arguments are forwarded to ``core.schedule()``.
+    """
+    qmodel = None
+    if quantize:
+        from repro.graphs import quantize_graph
+        qmodel = quantize_graph(graph, calibration)
+        graph = qmodel.graph
+    res = _schedule(graph, arena_budget=arena_budget, partition=partition,
+                    objective=objective, macs_cap=macs_cap,
+                    **schedule_opts)
+    exec_graph = res.graph if res.graph is not None else graph
+    plan = ArenaPlanner.plan(exec_graph, res.schedule)
+    ArenaPlanner.validate(plan, exec_graph)
+    executor = compile_schedule(exec_graph, res.schedule, plan,
+                                use_pallas=use_pallas, fuse=fuse)
+    return Deployment(graph=graph, exec_graph=exec_graph,
+                      schedule_result=res, plan=plan, executor=executor,
+                      qmodel=qmodel)
+
+
+__all__ = ["Deployment", "build"]

@@ -466,9 +466,54 @@ class CompiledExecutor:
     steps: int
     offsets: Dict[str, Tuple[int, int]]    # tensor -> (byte offset, bytes)
     zero_copy_reads: int = 0    # ring windows fused into their consumers
+    # jit/pmap wrappers are built lazily and cached per geometry: engines
+    # ask for the same batched program every dispatch, and an XLA compile
+    # per call would dwarf the work
+    _fn_cache: Dict[Any, Callable] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     def _offsets(self, tensor: str) -> Tuple[int, int]:
         return self.offsets[tensor]
+
+    # ------------------------------------------------- serving entry points
+    # ``raw_fn`` is a pure [arena] -> [arena] program, so batching and
+    # replication are plain jax transforms of it: one jit(vmap) for
+    # micro-batched single-device serving, one pmap(vmap) to shard replica
+    # batches across host/accelerator devices (the engines in
+    # ``serving/`` own the queueing; the executor owns the compiled forms).
+    def batched_fn(self, *, donate: bool = True) -> Callable:
+        """``[B, arena] -> [B, arena]``: one jitted vmap dispatch over a
+        stack of B arenas (B inferences amortise one XLA dispatch)."""
+        key = ("batched", donate)
+        if key not in self._fn_cache:
+            f = jax.vmap(self.raw_fn)
+            self._fn_cache[key] = (jax.jit(f, donate_argnums=0) if donate
+                                   else jax.jit(f))
+        return self._fn_cache[key]
+
+    def replicated_fn(self, replicas: int) -> Callable:
+        """``[R, B, arena] -> [R, B, arena]``: the vmapped arena program
+        pmapped over the first ``replicas`` visible devices — each replica
+        executes its lane batch independently (no collectives; requests
+        are embarrassingly parallel), so per-replica results are
+        bit-identical to the single-device ``batched_fn``."""
+        devices = jax.devices()
+        if replicas > len(devices):
+            raise ValueError(
+                f"replicas={replicas} but only {len(devices)} devices "
+                f"visible; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={replicas} "
+                f"before the first jax import (serving.force_host_devices)")
+        key = ("replicated", replicas)
+        if key not in self._fn_cache:
+            self._fn_cache[key] = jax.pmap(jax.vmap(self.raw_fn),
+                                           devices=devices[:replicas])
+        return self._fn_cache[key]
+
+    def pad_arena(self):
+        """An all-zeros arena for pad lanes (ragged tails): executed but
+        never read back, and visibly not a duplicated request."""
+        return jnp.zeros((self.arena_size,), self.dtype)
 
     def make_arena(self, inputs: Dict[str, Any]):
         """Fresh arena with the graph inputs written (as bytes) at their

@@ -1,11 +1,17 @@
-"""Batched serving engines with paper-integrated memory management.
+"""Serving engines over deployed graphs (single-device tier).
 
-``GraphServingEngine`` serves CNN computation graphs through the compiled
-arena executor (``mcu/compile.py``): the graph is scheduled once
-(reordering + optional partial execution against an arena budget), planned
-into one arena, lowered to a single jitted program, and requests are served
-in **micro-batches** — each micro-batch vmaps the arena program over a
-[B, arena_size] stack of arenas, so B inferences share one XLA dispatch.
+``GraphServingEngine`` serves CNN computation graphs through a
+``repro.deploy.Deployment`` (schedule → plan → validate → compile in one
+facade call): requests run in **micro-batches** — each batch vmaps the
+compiled arena program over a [B, arena_size] stack of arenas, so B
+inferences share one XLA dispatch.  A ragged final batch is padded with
+explicit all-zero arenas: pad lanes are executed (one compiled shape for
+the whole serve loop instead of an XLA recompile per remainder size) but
+are **accounted separately** (``stats.padded_lanes``) and never extracted
+— they are not requests, and per-request stats never count them.
+
+For replica-sharded continuous batching see ``serving/sharded.py``; both
+engines report the same typed ``EngineStats`` (``serving/stats.py``).
 
 ``ServingEngine`` runs prefill + greedy decode over batches of LLM
 requests.  The paper's contribution shows up at two levels (DESIGN.md §2,
@@ -15,33 +21,30 @@ L1/L2):
   is traced and its jaxpr equations re-scheduled with the paper's algorithm;
   the engine reports the peak-liveness delta (on TPU, XLA re-schedules after
   us, so the simulated liveness is the contract — same accounting the paper
-  uses for TFLite).  With ``execute_reordered=True`` the engine actually
-  evaluates the reordered jaxpr (bit-identical results; used by tests).
+  uses for TFLite).
 
 * **L2 — KV-block arena planning**: each admitted request owns a KV block
   whose lifetime is [admission, completion).  Blocks live in one HBM arena
   managed either by the paper's §4 dynamic allocator (first-fit + defrag,
   online) or by the §6 offline ``ArenaPlanner`` when the request schedule is
-  known (batch mode).  The engine reports peak arena bytes vs the static
-  all-requests-resident footprint.
+  known (batch mode).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.allocator import ArenaPlanner, DynamicAllocator
+from repro.core.allocator import DynamicAllocator
 from repro.core.graph import Graph
-from repro.core.heuristics import schedule as schedule_graph
 from repro.core.jaxpr_reorder import reorder_closed_jaxpr
-from repro.mcu.compile import compile_schedule
 from repro.models.model import Model, init_cache
+from repro.serving.stats import EngineStats
 
 
 @dataclasses.dataclass
@@ -67,58 +70,74 @@ def kv_block_bytes(cfg: ModelConfig, cache_len: int) -> int:
 
 
 class GraphServingEngine:
-    """Serve a CNN computation graph through the compiled arena executor.
+    """Micro-batched single-device serving of a deployed CNN graph.
 
-    One-time setup: schedule (reorder + optional partial execution against
-    ``arena_budget``), plan the arena, lower to a single jitted program.
-    ``serve`` then runs micro-batches: each batch stacks B arenas and vmaps
-    the arena program once, amortising dispatch across requests — the
-    multi-model/multi-tenant story all future backend work plugs into.
+    Construct from a graph (the facade runs schedule→plan→compile) or pass
+    an existing ``deployment=`` to share one compiled program between
+    engines.  ``serve`` runs micro-batches of ``micro_batch`` vmap lanes;
+    ``stats`` is a typed ``EngineStats``.
     """
 
-    def __init__(self, graph: Graph, *, arena_budget: Optional[int] = None,
+    def __init__(self, graph: Optional[Graph] = None, *,
+                 deployment=None, arena_budget: Optional[int] = None,
                  partition: bool = False, micro_batch: int = 8,
                  use_pallas: bool = False):
-        res = schedule_graph(graph, arena_budget=arena_budget,
-                             partition=partition)
-        self.result = res
-        self.exec_graph = res.graph if res.graph is not None else graph
-        self.plan = ArenaPlanner.plan(self.exec_graph, res.schedule)
-        ArenaPlanner.validate(self.plan, self.exec_graph)
-        self.executor = compile_schedule(self.exec_graph, res.schedule,
-                                         self.plan, use_pallas=use_pallas)
+        if deployment is None:
+            if graph is None:
+                raise ValueError("need a graph or a deployment")
+            from repro.deploy import build
+            deployment = build(graph, arena_budget=arena_budget,
+                               partition=partition, use_pallas=use_pallas)
+        self.deployment = deployment
+        # aliases kept from the pre-facade engine API
+        self.result = deployment.schedule_result
+        self.exec_graph = deployment.exec_graph
+        self.plan = deployment.plan
+        self.executor = deployment.executor
         self.micro_batch = micro_batch
-        self._batched = jax.jit(jax.vmap(self.executor.raw_fn),
-                                donate_argnums=0)
-        self.stats: Dict[str, float] = {
-            "schedule_peak_bytes": res.peak,
-            "arena_bytes": self.plan.arena_size,
-            "schedule_method": res.method,
-        }
+        self._batched = self.executor.batched_fn()
+        self.stats = EngineStats(
+            arena_bytes=int(self.plan.arena_size),
+            schedule_peak_bytes=int(self.result.peak),
+            schedule_method=self.result.method,
+            replicas=1, lanes=micro_batch)
 
-    def serve(self, requests: Sequence[Dict[str, np.ndarray]]
-              ) -> List[Dict[str, np.ndarray]]:
+    def serve(self, requests: Sequence[Dict[str, Any]]
+              ) -> List[Dict[str, Any]]:
         """Run every request's input dict through the compiled graph;
         returns one output dict per request, in order."""
-        results: List[Dict[str, np.ndarray]] = []
-        t0 = time.perf_counter()
+        ex = self.executor
+        results: List[Dict[str, Any]] = []
+        latencies: List[float] = []
+        padded = 0
         n_batches = 0
+        t_start = time.perf_counter()
         for i in range(0, len(requests), self.micro_batch):
             chunk = requests[i:i + self.micro_batch]
-            stack = [self.executor.make_arena(r) for r in chunk]
-            # pad a ragged tail up to micro_batch: one compiled shape for
-            # the whole serve loop instead of one XLA compile (seconds on
-            # MobileNet-scale graphs) per distinct remainder size
-            stack.extend([stack[0]] * (self.micro_batch - len(chunk)))
+            stack = [ex.make_arena(r) for r in chunk]
+            # pad a ragged tail up to micro_batch with explicit zero
+            # arenas: one compiled shape for the whole serve loop instead
+            # of one XLA compile (seconds on MobileNet-scale graphs) per
+            # distinct remainder size.  Pad lanes are executed but are
+            # not requests: counted in stats.padded_lanes, never
+            # extracted, never in per-request latency.
+            n_pad = self.micro_batch - len(chunk)
+            if n_pad:
+                pad = ex.pad_arena()
+                stack.extend([pad] * n_pad)
+                padded += n_pad
             arenas = self._batched(jnp.stack(stack))
             n_batches += 1
-            for b in range(len(chunk)):
-                results.append(self.executor.outputs_from(arenas[b]))
-        wall = time.perf_counter() - t0
-        if requests:
-            self.stats["us_per_request"] = wall * 1e6 / len(requests)
-        self.stats["micro_batches"] = n_batches
-        self.stats["requests"] = len(requests)
+            for b in range(len(chunk)):       # pad lanes b >= len(chunk)
+                results.append(ex.outputs_from(arenas[b]))   # skipped here
+            t_done = time.perf_counter()
+            # one-shot serve admits everything at t_start, so a request's
+            # latency is its batch's completion time
+            latencies.extend([t_done - t_start] * len(chunk))
+        wall = time.perf_counter() - t_start
+        self.stats.record_serve(requests=len(requests), padded_lanes=padded,
+                                dispatches=n_batches, wall_s=wall,
+                                latencies_s=latencies)
         return results
 
 
@@ -140,7 +159,7 @@ class ServingEngine:
         self.block_bytes = kv_block_bytes(cfg, cache_len)
         self.arena = DynamicAllocator(capacity=hbm_budget)
         self.reorder_report = None
-        self.stats: Dict[str, float] = {}
+        self.stats = EngineStats(lanes=max_batch)
 
     # --------------------------------------------------------- L1 reorder
     def analyse_decode_schedule(self, batch_size: int):
@@ -163,6 +182,9 @@ class ServingEngine:
         results: List[RequestResult] = []
         pending = list(requests)
         peak_concurrent = 0
+        t_start = time.perf_counter()
+        latencies: List[float] = []
+        n_batches = 0
         while pending:
             batch = pending[:self.max_batch]
             pending = pending[self.max_batch:]
@@ -171,12 +193,19 @@ class ServingEngine:
                 self.arena.alloc(f"req{r.rid}", self.block_bytes)
             peak_concurrent = max(peak_concurrent, len(batch))
             results.extend(self._run_batch(batch))
+            n_batches += 1
+            t_done = time.perf_counter()
+            latencies.extend([t_done - t_start] * len(batch))
             for r in batch:
                 self.arena.free(f"req{r.rid}")
             self.arena.defragment()
-        self.stats["arena_peak_bytes"] = self.arena.stats.peak_bytes
-        self.stats["static_bytes"] = self.block_bytes * len(requests)
-        self.stats["peak_concurrent"] = peak_concurrent
+        wall = time.perf_counter() - t_start
+        self.stats.record_serve(requests=len(requests), padded_lanes=0,
+                                dispatches=n_batches, wall_s=wall,
+                                latencies_s=latencies)
+        self.stats.kv_arena_peak_bytes = self.arena.stats.peak_bytes
+        self.stats.kv_static_bytes = self.block_bytes * len(requests)
+        self.stats.peak_concurrent = peak_concurrent
         return results
 
     def _run_batch(self, batch: Sequence[Request]) -> List[RequestResult]:

@@ -1,0 +1,172 @@
+"""Sharded continuous-batching serving engine (the production tier).
+
+``GraphServingEngine`` amortises XLA dispatch across vmap lanes but still
+runs every batch on one device and makes late requests wait for the whole
+serve loop.  ``ShardedServingEngine`` scales that out and opens the batch
+boundary:
+
+* **Replica sharding** — the deployed arena program is ``pmap(vmap(...))``
+  over ``replicas`` devices: each dispatch executes an ``[R, L, arena]``
+  stack, R replicas × L vmap lanes, with no collectives (requests are
+  embarrassingly parallel), so per-lane results are bit-identical to a
+  single ``Deployment.run``.  On CPU hosts the replica mesh comes from
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — call
+  ``force_host_devices(N)`` (importable without touching jax) before the
+  first jax import.
+* **Continuous batching at dispatch granularity** — requests enter an
+  admission queue (``submit``); every ``step`` admits up to R×L queued
+  requests *at that batch boundary*.  A late arrival joins the next
+  dispatch instead of waiting for the current serve loop to finish —
+  "continuous" here means per super-step, the same granularity at which
+  Pex's partial execution trades memory for recompute inside each lane.
+* **Honest ragged tails** — when fewer than R×L requests are admitted the
+  remaining lanes are padded with explicit all-zero arenas: executed (one
+  compiled shape, no per-remainder XLA recompiles), counted in
+  ``stats.padded_lanes``, never extracted and never part of per-request
+  latency.
+* **Typed stats** — per-request latency (admission → completion of the
+  request's dispatch) p50/p99 and engine throughput (true requests / wall
+  second) in ``EngineStats``; the ``requests/s`` figure is what
+  ``benchmarks/bench_serving.py`` gates in CI.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.stats import EngineStats
+
+
+@dataclasses.dataclass
+class _Pending:
+    rid: int
+    inputs: Dict[str, Any]
+    t_submit: float
+
+
+class ShardedServingEngine:
+    """Continuous-batching engine over an ``[R, L]`` replica × lane grid.
+
+    ``deployment`` is a ``repro.deploy.Deployment`` (or a graph, which is
+    built through the facade).  ``replicas=None`` takes every visible
+    device; ``lanes`` is the vmap width per replica, so one dispatch
+    serves up to ``replicas * lanes`` requests.
+    """
+
+    def __init__(self, deployment, *, replicas: Optional[int] = None,
+                 lanes: int = 4, **build_opts):
+        from repro.deploy import Deployment, build
+        if not isinstance(deployment, Deployment):
+            deployment = build(deployment, **build_opts)
+        elif build_opts:
+            raise ValueError(f"build options {sorted(build_opts)} are for "
+                             f"graph arguments; this is already a Deployment")
+        self.deployment = deployment
+        self.executor = deployment.executor
+        n_dev = len(jax.devices())
+        self.replicas = n_dev if replicas is None else min(replicas, n_dev)
+        if self.replicas < 1:
+            raise ValueError("need at least one replica")
+        self.lanes = int(lanes)
+        self._fn = self.executor.replicated_fn(self.replicas)
+        self._queue: collections.deque[_Pending] = collections.deque()
+        self._results: Dict[int, Dict[str, Any]] = {}
+        self._latencies: List[float] = []
+        self._next_rid = 0
+        self._dispatches = 0
+        self._padded = 0
+        self._completed = 0
+        self._t_first_submit: Optional[float] = None
+        self.stats = EngineStats(
+            arena_bytes=deployment.arena_bytes,
+            schedule_peak_bytes=int(deployment.schedule_result.peak),
+            schedule_method=deployment.schedule_result.method,
+            replicas=self.replicas, lanes=self.lanes)
+
+    # ------------------------------------------------------ admission queue
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def capacity(self) -> int:
+        """Requests per dispatch: replicas × lanes."""
+        return self.replicas * self.lanes
+
+    def submit(self, inputs: Dict[str, Any]) -> int:
+        """Enqueue one request; returns its rid.  The request joins the
+        next dispatch boundary (continuous batching): admission order is
+        submission order, whatever the interleaving with ``step`` calls."""
+        rid = self._next_rid
+        self._next_rid += 1
+        now = time.perf_counter()
+        if self._t_first_submit is None:
+            self._t_first_submit = now
+        self._queue.append(_Pending(rid, inputs, now))
+        return rid
+
+    def step(self) -> int:
+        """One dispatch: admit up to ``capacity`` queued requests, pad the
+        ragged remainder with zero arenas, execute the replicated program,
+        complete the admitted requests.  Returns how many completed."""
+        if not self._queue:
+            return 0
+        ex = self.executor
+        admitted = [self._queue.popleft()
+                    for _ in range(min(len(self._queue), self.capacity))]
+        stack = [ex.make_arena(p.inputs) for p in admitted]
+        n_pad = self.capacity - len(stack)
+        if n_pad:
+            pad = ex.pad_arena()
+            stack.extend([pad] * n_pad)
+            self._padded += n_pad
+        batch = jnp.stack(stack).reshape(
+            (self.replicas, self.lanes, ex.arena_size))
+        arenas = self._fn(batch)
+        jax.block_until_ready(arenas)
+        t_done = time.perf_counter()
+        for i, p in enumerate(admitted):      # lanes i >= len(admitted)
+            r, b = divmod(i, self.lanes)      # are pads: never extracted
+            self._results[p.rid] = ex.outputs_from(arenas[r, b])
+            self._latencies.append(t_done - p.t_submit)
+        self._dispatches += 1
+        self._completed += len(admitted)
+        return len(admitted)
+
+    def take(self, rid: int) -> Dict[str, Any]:
+        """The completed outputs for ``rid`` (pops them)."""
+        return self._results.pop(rid)
+
+    def drain(self) -> Dict[int, Dict[str, Any]]:
+        """Step until the queue is empty; returns {rid: outputs} for every
+        result completed and not yet taken, and records serve stats over
+        the window since the first un-drained submit."""
+        while self._queue:
+            self.step()
+        wall = (time.perf_counter() - self._t_first_submit
+                if self._t_first_submit is not None else 0.0)
+        self.stats.record_serve(
+            requests=self._completed, padded_lanes=self._padded,
+            dispatches=self._dispatches, wall_s=wall,
+            latencies_s=self._latencies)
+        self._completed = 0
+        self._dispatches = 0
+        self._padded = 0
+        self._latencies = []
+        self._t_first_submit = None
+        out, self._results = self._results, {}
+        return out
+
+    # -------------------------------------------------------- one-shot API
+    def serve(self, requests: Sequence[Dict[str, Any]]
+              ) -> List[Dict[str, Any]]:
+        """Submit every request, drain, return outputs in request order
+        (same contract as ``GraphServingEngine.serve``)."""
+        rids = [self.submit(r) for r in requests]
+        done = self.drain()
+        return [done[rid] for rid in rids]

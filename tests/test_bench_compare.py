@@ -81,6 +81,46 @@ def test_missing_row_fails_and_new_row_notes():
     assert any("new row" in n for n in notes)
 
 
+def test_requests_per_s_floor_gate():
+    """Serving throughput rows are gated as a tolerant floor: fresh rps
+    may dip to baseline * (1 - rps_tol); below that fails, and losing the
+    figure entirely fails (gate must not be silently disarmed)."""
+    base = _index([dict(_row("s"), requests_per_s=100.0)])
+    ok = _index([dict(_row("s"), requests_per_s=51.0)])
+    at_floor = _index([dict(_row("s"), requests_per_s=50.0)])
+    below = _index([dict(_row("s"), requests_per_s=49.0)])
+    faster = _index([dict(_row("s"), requests_per_s=400.0)])
+    assert compare_rows(base, ok, 0.2, 0, rps_tol=0.5)[0] == []
+    assert compare_rows(base, at_floor, 0.2, 0, rps_tol=0.5)[0] == []
+    assert compare_rows(base, faster, 0.2, 0, rps_tol=0.5)[0] == []
+    failures, _ = compare_rows(base, below, 0.2, 0, rps_tol=0.5)
+    assert len(failures) == 1 and "requests/s fell" in failures[0]
+    lost = _index([_row("s")])
+    failures, _ = compare_rows(base, lost, 0.2, 0, rps_tol=0.5)
+    assert len(failures) == 1 and "requests_per_s lost" in failures[0]
+    # rows without throughput stay ungated
+    plain = _index([_row("p")])
+    assert compare_rows(plain, dict(plain), 0.2, 0, rps_tol=0.5)[0] == []
+
+
+def test_update_baseline_rps_floor_envelope():
+    """Merging keeps the weakest observed requests/s (floor envelope) and
+    refuses a merge that would drop the figure entirely."""
+    from benchmarks.run import merge_baseline
+
+    base = {"rows": [dict(_row("s", us=100.0, arena=64),
+                          requests_per_s=100.0)]}
+    notes = merge_baseline(base, [dict(_row("s", us=90.0, arena=64),
+                                       requests_per_s=80.0)])
+    assert _index(base["rows"])["s"]["requests_per_s"] == 80.0
+    assert any("requests/s floor" in n for n in notes)
+    merge_baseline(base, [dict(_row("s", us=90.0, arena=64),
+                               requests_per_s=200.0)])
+    assert _index(base["rows"])["s"]["requests_per_s"] == 80.0  # floor kept
+    with pytest.raises(SystemExit, match="lost its requests_per_s"):
+        merge_baseline(base, [_row("s", us=90.0, arena=64)])
+
+
 def test_dtype_change_is_noted():
     base = _index([_row("a", dtypes="float32")])
     fresh = _index([_row("a", dtypes="int8")])

@@ -13,6 +13,7 @@ mixed-dtype graph checks f32 and int8 placements coexist in one arena.
 import numpy as np
 import pytest
 
+import repro.deploy as deploy
 from repro.core import ArenaPlanner, greedy_schedule, partition_graph, schedule
 from repro.core.graph import Graph
 from repro.graphs import (figure1_executable_graph, figure1_int8_graph,
@@ -149,18 +150,35 @@ def test_compiled_pallas_conv_within_tolerance():
 
 def test_graph_serving_engine_micro_batches():
     g = _tiny_cnn()
-    eng = GraphServingEngine(g, micro_batch=2)
+    d = deploy.build(g)                     # the facade path engines ride on
+    eng = GraphServingEngine(deployment=d, micro_batch=2)
     rng = np.random.default_rng(3)
     reqs = [{"input": rng.standard_normal((16, 16, 3)).astype(np.float32)}
             for _ in range(5)]
     outs = eng.serve(reqs)
     assert len(outs) == 5
-    assert eng.stats["micro_batches"] == 3
+    assert eng.stats.dispatches == 3
+    assert eng.stats.padded_lanes == 1      # 5 requests over 3 x 2 lanes
     for r, o in zip(reqs, outs):
         ref = MicroInterpreter(eng.exec_graph).run(
             r, schedule=eng.result.schedule)
         for name in g.outputs:
             np.testing.assert_array_equal(ref.outputs[name], o[name])
+
+
+def test_deploy_facade_is_the_compiled_chain():
+    """repro.deploy.build == schedule -> plan -> validate -> compile, so
+    its outputs sit inside the same differential contract: bit-identical
+    to the interpreter on the facade's own schedule."""
+    for factory in (_tiny_cnn, _quantized(_tiny_cnn)):
+        g = factory()
+        d = deploy.build(g)
+        x = random_input(g)
+        ref = MicroInterpreter(d.exec_graph).run(x, schedule=d.schedule)
+        out = d.run(x)
+        for o in g.outputs:
+            np.testing.assert_array_equal(ref.outputs[o], out[o])
+        assert d.arena_bytes == d.plan.arena_size == d.executor.arena_size
 
 
 def _mixed_dtype_graph() -> Graph:

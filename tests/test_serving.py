@@ -30,9 +30,13 @@ def test_serve_batches_and_completes(engine):
     for r in res:
         assert len(r.tokens) == 6
         assert all(0 <= t < engine.cfg.vocab_size for t in r.tokens)
-    # L2 stats: peak arena is bounded by max_batch blocks, static by all 5
-    assert engine.stats["arena_peak_bytes"] == 2 * engine.block_bytes
-    assert engine.stats["static_bytes"] == 5 * engine.block_bytes
+    # L2 stats (typed EngineStats): peak arena is bounded by max_batch
+    # blocks, static by all 5; legacy dict-style keys stay readable
+    assert engine.stats.kv_arena_peak_bytes == 2 * engine.block_bytes
+    assert engine.stats.kv_static_bytes == 5 * engine.block_bytes
+    assert engine.stats["arena_peak_bytes"] == engine.stats.kv_arena_peak_bytes
+    assert engine.stats.requests == 5
+    assert engine.stats.as_json()["requests_per_s"] > 0
 
 
 def test_decode_step_reorder_analysis(engine):
