@@ -80,3 +80,57 @@ def _run_quant(report):
     ref = qdwconv2d(x, wd, 1, qp["mult"], qp["zp_in"], qp["zp_out"])
     report("kernels.qdwconv3x3.max_err", dt,
            int(jnp.abs(o.astype(jnp.int32) - ref.astype(jnp.int32)).max()))
+
+    # fused conv->requant->residual-add (the cascade tail's epilogue op)
+    from repro.graphs.cnn_ops import qadd
+    from repro.kernels import qconv_add_fused
+
+    addp = (0.71, 0.39, qp["zp_out"], 2, -7)
+    res = qrand((48, 48, 64))
+    t0 = time.perf_counter()
+    o = qconv_add_fused(x, w1, res, stride=1, add_params=addp,
+                        interpret=True, **qp)
+    o.block_until_ready()
+    dt = (time.perf_counter() - t0) * 1e6
+    conv = qconv2d(x, w1, 1, qp["mult"], qp["zp_in"], qp["zp_out"])
+    ref = qadd(conv, res, *addp)
+    report("kernels.qconv_add1x1.max_err", dt,
+           int(jnp.abs(o.astype(jnp.int32) - ref.astype(jnp.int32)).max()))
+
+    _run_tpu(report, x, w1, w3, wd, res, addp, qp)
+
+
+def _run_tpu(report, x, w1, w3, wd, res, addp, qp):
+    """Compiled (non-interpret) leg, TPU only: wall-clock on real hardware
+    plus the same bit-identity contract.  Rows only exist on TPU runners,
+    so the envelope baseline on CPU machines is unaffected."""
+    if jax.default_backend() != "tpu":
+        return
+    from repro.graphs.cnn_ops import qadd, qconv2d, qdwconv2d
+    from repro.kernels import qconv_add_fused, qconv_fused, qdwconv_fused
+
+    cases = [
+        ("qconv1x1", lambda: qconv_fused(x, w1, stride=1, **qp),
+         lambda: qconv2d(x, w1, 1, qp["mult"], qp["zp_in"], qp["zp_out"])),
+        ("qconv3x3s2", lambda: qconv_fused(x, w3, stride=2, **qp),
+         lambda: qconv2d(x, w3, 2, qp["mult"], qp["zp_in"], qp["zp_out"])),
+        ("qdwconv3x3", lambda: qdwconv_fused(x, wd, stride=1, **qp),
+         lambda: qdwconv2d(x, wd, 1, qp["mult"], qp["zp_in"],
+                           qp["zp_out"])),
+        ("qconv_add1x1",
+         lambda: qconv_add_fused(x, w1, res, stride=1, add_params=addp,
+                                 **qp),
+         lambda: qadd(qconv2d(x, w1, 1, qp["mult"], qp["zp_in"],
+                              qp["zp_out"]), res, *addp)),
+    ]
+    for name, fn, ref_fn in cases:
+        fn().block_until_ready()          # compile outside the timing
+        t0 = time.perf_counter()
+        for _ in range(10):
+            o = fn()
+        o.block_until_ready()
+        dt = (time.perf_counter() - t0) * 1e5   # us per call over 10
+        err = int(jnp.abs(o.astype(jnp.int32)
+                          - ref_fn().astype(jnp.int32)).max())
+        assert err == 0, f"{name}: TPU leg lost bit-identity (err={err})"
+        report(f"kernels.{name}.tpu_us", dt, 0)

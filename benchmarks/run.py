@@ -204,8 +204,11 @@ def main(argv=None) -> None:
         if meta.get("nodes") is not None:
             jr["nodes"] = meta["nodes"]
         # serving throughput metadata: requests_per_s enters the
-        # compare.py floor gate; the latency percentiles ride along
-        for k in ("requests_per_s", "p50_ms", "p99_ms", "replicas"):
+        # compare.py floor gate; the latency percentiles ride along.
+        # tile_rows/tile_cols tag 2-D tiled-cascade rows with the steady
+        # working-tile shape (rows per chunk x columns per W-strip)
+        for k in ("requests_per_s", "p50_ms", "p99_ms", "replicas",
+                  "tile_rows", "tile_cols"):
             if meta.get(k) is not None:
                 jr[k] = meta[k]
         json_rows.append(jr)

@@ -366,7 +366,10 @@ def schedule(graph: Graph, exact_limit: int = 18, contract_limit: int = 40,
     chained through ring buffers so no inter-segment tensor ever exists
     whole (capped on the halo-recompute MACs fraction) — followed by a
     whole-externals pass over the cascaded graph for any remaining
-    over-budget runs (the cascade's tail).  The lowest peak wins.
+    over-budget runs (the cascade's tail).  When row rings alone still
+    miss the budget, a final rung re-plans the cascade with W-strips
+    (2-D tiled streaming: reorder → pex → 1-D cascade → 2-D tiled
+    cascade).  The lowest peak wins at every rung.
 
     **Joint branch-and-bound rung.**  After the ladder, graphs with at most
     ``solver_op_limit`` operators get a bounded pass of the joint
@@ -403,7 +406,8 @@ def _ladder(graph: Graph, exact_limit: int, contract_limit: int,
             partition: bool,
             partition_opts: Optional[dict]) -> ScheduleResult:
     """The fixed escalation ladder: reorder → pex → cascade → pex-over-tail
-    (greedy search inside each rung); the joint solver refines on top."""
+    → 2-D tiled cascade (greedy search inside each rung); the joint solver
+    refines on top."""
     best = _schedule_plain(graph, exact_limit, contract_limit, beam_width)
     want = partition or (arena_budget is not None
                          and best.peak > arena_budget)
@@ -429,33 +433,51 @@ def _ladder(graph: Graph, exact_limit: int, contract_limit: int,
     # budget) must bind the escalation too, not just the whole-Pex passes
     shared = {k: v for k, v in (partition_opts or {}).items()
               if k in ("max_k", "overhead_cap", "k_choices")}
-    cr = cascade_graph(graph, budget=arena_budget, **shared)
-    if not cr.cascades:
-        return best
-    cg = cr.graph
-    extra = cr.extra_macs
-    cbest = min(_cheap_candidates(cg), key=lambda r: r.peak)
-    method = cbest.method + "+cascade"
-    if cbest.peak > arena_budget:
-        # the cascade's conventional tail may itself be over budget —
-        # whole-externals partial execution composes over the cascaded graph
-        tr = partition_graph(cg, budget=arena_budget,
-                             **(partition_opts or {}))
-        if tr.segments:
-            tbest = min(_cheap_candidates(tr.graph), key=lambda r: r.peak)
-            if tbest.peak < cbest.peak:
-                cg, cbest = tr.graph, tbest
-                method = tbest.method + "+cascade+pex"
-                # composed rewrites: halo recompute adds up — the Pex pass
-                # re-runs rows of the *cascaded* graph, on top of the
-                # cascade's own recompute.  Keep the fraction anchored on
-                # the original graph's MACs so it composes with the
-                # cascade rung and the solver's points.
-                extra += tr.extra_macs
-    if cbest.peak < best.peak:
+
+    def cascade_rung(strips_choices, tag):
+        cr = cascade_graph(graph, budget=arena_budget,
+                           strips_choices=strips_choices, **shared)
+        if not cr.cascades:
+            return None
+        cg = cr.graph
+        extra = cr.extra_macs
+        cbest = min(_cheap_candidates(cg), key=lambda r: r.peak)
+        method = cbest.method + tag
+        if cbest.peak > arena_budget:
+            # the cascade's conventional tail may itself be over budget —
+            # whole-externals partial execution composes over the cascaded
+            # graph
+            tr = partition_graph(cg, budget=arena_budget,
+                                 **(partition_opts or {}))
+            if tr.segments:
+                tbest = min(_cheap_candidates(tr.graph),
+                            key=lambda r: r.peak)
+                if tbest.peak < cbest.peak:
+                    cg, cbest = tr.graph, tbest
+                    method = tbest.method + tag + "+pex"
+                    # composed rewrites: halo recompute adds up — the Pex
+                    # pass re-runs rows of the *cascaded* graph, on top of
+                    # the cascade's own recompute.  Keep the fraction
+                    # anchored on the original graph's MACs so it composes
+                    # with the cascade rung and the solver's points.
+                    extra += tr.extra_macs
         frac = extra / cr.total_macs if cr.total_macs else 0.0
         return dataclasses.replace(cbest, graph=cg, method=method,
                                    extra_macs=extra,
                                    total_macs=cr.total_macs,
                                    extra_macs_frac=frac)
+
+    cand = cascade_rung((1,), "+cascade")
+    if cand is None:
+        return best
+    if cand.peak < best.peak:
+        best = cand
+    if best.peak > arena_budget:
+        # 2-D tiled rung: row rings alone miss the budget, so re-plan with
+        # W-strips in the search space (MCUNetV2-style patch streaming).
+        # Gated on still-over-budget so in-budget row-cascade goldens are
+        # byte-identical to the pre-2-D ladder.
+        cand2d = cascade_rung((2, 3, 4), "+cascade2d")
+        if cand2d is not None and cand2d.peak < best.peak:
+            best = cand2d
     return best

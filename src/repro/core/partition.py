@@ -62,6 +62,12 @@ class SliceSpec:
     explicit edge padding; ``None`` leaves clones without semantics
     (scheduling-only graphs).  ``macs_per_row`` feeds the halo-recompute
     overhead model.
+
+    ``kernel_w``/``stride_w`` describe the same window map along the second
+    (width) axis for 2-D tiled streaming; ``None`` means square — the
+    height values apply.  A 2-D-capable ``make_fn`` additionally accepts
+    ``(pad_left, pad_right)``; 1-D callers never pass them, so legacy
+    two-argument factories keep working unchanged.
     """
 
     kernel: int = 1
@@ -69,6 +75,16 @@ class SliceSpec:
     sliced_inputs: Optional[Tuple[int, ...]] = None
     make_fn: Optional[Callable[[Operator, int, int], Callable[..., Any]]] = None
     macs_per_row: int = 0
+    kernel_w: Optional[int] = None
+    stride_w: Optional[int] = None
+
+    @property
+    def kw(self) -> int:
+        return self.kernel if self.kernel_w is None else self.kernel_w
+
+    @property
+    def sw(self) -> int:
+        return self.stride if self.stride_w is None else self.stride_w
 
 
 def spec_of(op: Operator) -> Optional[SliceSpec]:
@@ -102,6 +118,28 @@ def _height(graph: Graph, tensor: str) -> Optional[int]:
     if h < 1 or t.size % h != 0:
         return None
     return h
+
+
+def _width(graph: Graph, tensor: str) -> Optional[int]:
+    """Spatial width (second axis) of a tensor, or ``None`` when the shape
+    has no width axis — 1-D tensors stream by rows only."""
+    t = graph.tensors[tensor]
+    if len(t.shape) < 2:
+        return None
+    h, w = int(t.shape[0]), int(t.shape[1])
+    if w < 1 or h < 1 or t.size % (h * w) != 0:
+        return None
+    return w
+
+
+def _win_row_bytes(graph: Graph, tensor: str, cols: Tuple[int, int]) -> int:
+    """Bytes of ONE row narrowed to the column window [clo, chi): row bytes
+    scale linearly in retained columns (rows are column-major contiguous in
+    the byte model, so the division is exact)."""
+    w = _width(graph, tensor)
+    assert w is not None
+    clo, chi = cols
+    return _row_bytes(graph, tensor) * (chi - clo) // w
 
 
 def _chain_input_index(op: Operator, pred_output: str) -> int:
@@ -378,25 +416,38 @@ def plan_partition(graph: Graph, budget: Optional[int] = None,
 
 
 # -------------------------------------------------------------------- rewrite
-def _slice_fn(lo: int, hi: int) -> Callable[..., Any]:
-    def fn(a, lo=lo, hi=hi):
-        return np.asarray(a)[lo:hi]
+def _slice_fn(lo: int, hi: int, clo: Optional[int] = None,
+              chi: Optional[int] = None) -> Callable[..., Any]:
+    if clo is None:
+        def fn(a, lo=lo, hi=hi):
+            return np.asarray(a)[lo:hi]
+    else:
+        def fn(a, lo=lo, hi=hi, clo=clo, chi=chi):
+            return np.asarray(a)[lo:hi, clo:chi]
     return fn
 
 
-def _concat_fn(start: int, shape: Tuple[int, ...], first: bool
-               ) -> Callable[..., Any]:
+def _concat_fn(start: int, shape: Tuple[int, ...], first: bool,
+               cstart: Optional[int] = None) -> Callable[..., Any]:
     if first:
-        def fn(part, start=start, shape=shape):
+        def fn(part, start=start, shape=shape, cstart=cstart):
             part = np.asarray(part)
             acc = np.zeros(shape, part.dtype)
-            acc[start:start + part.shape[0]] = part
+            if cstart is None:
+                acc[start:start + part.shape[0]] = part
+            else:
+                acc[start:start + part.shape[0],
+                    cstart:cstart + part.shape[1]] = part
             return acc
     else:
-        def fn(acc, part, start=start):
+        def fn(acc, part, start=start, cstart=cstart):
             part = np.asarray(part)
             out = np.array(acc)        # the simulator copies; on-device this
-            out[start:start + part.shape[0]] = part   # writes in place
+            if cstart is None:         # writes in place
+                out[start:start + part.shape[0]] = part
+            else:
+                out[start:start + part.shape[0],
+                    cstart:cstart + part.shape[1]] = part
             return out
     return fn
 
@@ -598,6 +649,7 @@ class Cascade:
     min_rows: int = 1             # per-iteration chunk floor (see plans)
     rate_div: int = 1             # pipeline slowdown factor (see plans)
     extra_macs: int = 0           # absolute halo MACs (whole-graph units)
+    strips: int = 1               # W-strips: 1 = row rings, >1 = 2-D tiles
 
     @property
     def ops(self) -> List[Operator]:
@@ -656,6 +708,83 @@ def _seg_need_hi(graph: Graph, ops: Sequence[Operator], ob: int) -> int:
         _, pad_beg, _ = same_pads(h_in, spec.kernel, spec.stride)
         b = min((b - 1) * spec.stride - pad_beg + spec.kernel, h_in)
     return b
+
+
+def _backprop_cols(graph: Graph, members: Sequence[Operator],
+                   ca: int, cb: int
+                   ) -> Tuple[Dict[str, Tuple[int, int]],
+                              Dict[str, List[Optional[Tuple[int, int,
+                                                            int, int]]]]]:
+    """Column twin of ``_backprop_segment`` over the whole member chain:
+    compose the width-axis window maps backward from final-output columns
+    [ca, cb).  Column windows are constant across row slices (the row and
+    column maps are independent under SAME padding), so one pass per
+    W-strip covers every iteration of the cascade.
+
+    Returns (per-op output column window, per-op per-input column window
+    ``(lo, hi, pad_left, pad_right)`` — ``None`` for whole inputs)."""
+    out: Dict[str, Tuple[int, int]] = {}
+    ins: Dict[str, List[Optional[Tuple[int, int, int, int]]]] = {}
+    a, b = ca, cb
+    for d in range(len(members) - 1, -1, -1):
+        op = members[d]
+        spec = spec_of(op)
+        assert spec is not None
+        out[op.name] = (a, b)
+        sliced = _sliced_indices(op)
+        col_plan: List[Optional[Tuple[int, int, int, int]]] = []
+        for idx, inp in enumerate(op.inputs):
+            if idx not in sliced:
+                col_plan.append(None)
+                continue
+            w_in = _width(graph, inp)
+            assert w_in is not None
+            col_plan.append(in_rows(spec.kw, spec.sw, w_in, a, b))
+        ins[op.name] = col_plan
+        if d > 0:
+            ci = _chain_input_index(op, members[d - 1].output)
+            lo, hi, _, _ = col_plan[ci]  # type: ignore[misc]
+            a, b = lo, hi
+    return out, ins
+
+
+def _strips_eligible(graph: Graph, members: Sequence[Operator],
+                     strips: int) -> bool:
+    """Whether the member chain supports ``strips`` W-strips: every tensor
+    on the chain has a width axis, every windowed member's SAME width map
+    is consistent (mirror of the height checks in ``_op_eligible``), and
+    the final output is wide enough to split."""
+    if strips < 2:
+        return True
+    w_final = _width(graph, members[-1].output)
+    if w_final is None or w_final < strips:
+        return False
+    for op in members:
+        spec = spec_of(op)
+        assert spec is not None
+        w_out = _width(graph, op.output)
+        if w_out is None:
+            return False
+        sliced = _sliced_indices(op)
+        if spec.kw > 1 or spec.sw > 1:
+            if len(sliced) != 1:
+                return False
+            w_in = _width(graph, op.inputs[sliced[0]])
+            if w_in is None or same_pads(w_in, spec.kw, spec.sw)[0] != w_out:
+                return False
+        else:
+            for idx in sliced:
+                if (idx >= len(op.inputs)
+                        or _width(graph, op.inputs[idx]) != w_out):
+                    return False
+    return True
+
+
+def _strip_bounds(w_final: int, strips: int) -> List[Tuple[int, int]]:
+    """Final-output column ranges of the W-strips (same balanced split rule
+    as the row-slice bounds in ``slice_plans``)."""
+    bounds = [(j * w_final) // strips for j in range(strips + 1)]
+    return [(bounds[j], bounds[j + 1]) for j in range(strips)]
 
 
 def cascade_slice_plans(graph: Graph, segments: Sequence[List[Operator]],
@@ -762,8 +891,8 @@ def cascade_slice_plans(graph: Graph, segments: Sequence[List[Operator]],
 
 
 def estimate_cascade(graph: Graph, segments: Sequence[List[Operator]],
-                     k: int, min_rows: int = 1, rate_div: int = 1
-                     ) -> Tuple[int, float, List[int], int]:
+                     k: int, min_rows: int = 1, rate_div: int = 1,
+                     strips: int = 1) -> Tuple[int, float, List[int], int]:
     """(estimated peak bytes, halo-recompute MACs as a fraction of the
     cascade's own MACs — the planner's overhead-cap unit, ring rows,
     absolute halo-recompute MACs — the whole-graph reporting unit).
@@ -772,44 +901,101 @@ def estimate_cascade(graph: Graph, segments: Sequence[List[Operator]],
     ``ring_rows * row_bytes`` (the streaming saving), the final output
     whole (the inplace concat accumulator), and the fattest per-slice
     step.  Boundary rows are produced exactly once — recompute happens
-    only *inside* segments, so cascades also shrink the extra-MACs cost."""
+    only *inside* segments, so cascades also shrink the extra-MACs cost.
+
+    With ``strips > 1`` the cascade runs once per W-strip: rings and
+    working slices narrow to each strip's column windows (``tile_rows ×
+    tile_cols × C`` working sets), the strips execute sequentially so the
+    peak takes the max over strips, and the column halos show up as extra
+    per-element work — MACs scale by retained-columns / full-width, which
+    reduces exactly to the 1-D formula at ``strips == 1``."""
     slices, rings = cascade_slice_plans(graph, segments, k, min_rows,
                                         rate_div)
     members = [op for seg in segments for op in seg]
     ext_bytes = sum(graph.size(e) for e in _external_inputs(members))
     out_bytes = graph.size(segments[-1][-1].output)
-    ring_bytes = sum(r * _row_bytes(graph, seg[-1].output)
-                     for r, seg in zip(rings, segments[:-1]))
-    slice_live = 0
-    rows_done: Dict[str, int] = {}
-    for cs in slices:
-        for i, seg in enumerate(segments):
-            plan = cs.plans[i]
-            if plan is None:
-                continue
-            for op in seg:
-                oa, ob = plan.out[op.name]
-                step = (ob - oa) * _row_bytes(graph, op.output)
-                for idx, rp in enumerate(plan.ins[op.name]):
-                    if rp is None:
-                        continue
-                    # boundary inputs: the ring itself is charged whole in
-                    # ring_bytes; the read materialises the halo'd window
-                    # once, same cost shape as an external extract
-                    lo, hi, _, _ = rp
-                    step += (hi - lo) * _row_bytes(graph, op.inputs[idx])
-                slice_live = max(slice_live, step)
-                rows_done[op.name] = rows_done.get(op.name, 0) + (ob - oa)
+    if strips == 1:
+        ring_bytes = sum(r * _row_bytes(graph, seg[-1].output)
+                         for r, seg in zip(rings, segments[:-1]))
+        slice_live = 0
+        rows_done: Dict[str, int] = {}
+        for cs in slices:
+            for i, seg in enumerate(segments):
+                plan = cs.plans[i]
+                if plan is None:
+                    continue
+                for op in seg:
+                    oa, ob = plan.out[op.name]
+                    step = (ob - oa) * _row_bytes(graph, op.output)
+                    for idx, rp in enumerate(plan.ins[op.name]):
+                        if rp is None:
+                            continue
+                        # boundary inputs: the ring itself is charged whole
+                        # in ring_bytes; the read materialises the halo'd
+                        # window once, same cost shape as an external
+                        # extract
+                        lo, hi, _, _ = rp
+                        step += (hi - lo) * _row_bytes(graph, op.inputs[idx])
+                    slice_live = max(slice_live, step)
+                    rows_done[op.name] = rows_done.get(op.name, 0) + (ob - oa)
+        base_macs = extra_macs = 0
+        for op in members:
+            h = _height(graph, op.output)
+            assert h is not None
+            base_macs += h * _macs_per_row(graph, op)
+            extra = rows_done.get(op.name, 0) - h
+            extra_macs += max(0, extra) * _macs_per_row(graph, op)
+        frac = extra_macs / base_macs if base_macs else 0.0
+        return (ext_bytes + ring_bytes + out_bytes + slice_live, frac, rings,
+                extra_macs)
+
+    assert _strips_eligible(graph, members, strips)
+    w_final = _width(graph, members[-1].output)
+    assert w_final is not None
+    strip_peak = 0
+    work: Dict[str, int] = {}        # per op: row-equivalents done (x W)
+    for ca, cb in _strip_bounds(w_final, strips):
+        cols_out, cols_ins = _backprop_cols(graph, members, ca, cb)
+        ring_bytes = sum(
+            r * _win_row_bytes(graph, seg[-1].output,
+                               cols_out[seg[-1].name][:2])
+            for r, seg in zip(rings, segments[:-1]))
+        slice_live = 0
+        for cs in slices:
+            for i, seg in enumerate(segments):
+                plan = cs.plans[i]
+                if plan is None:
+                    continue
+                for op in seg:
+                    oa, ob = plan.out[op.name]
+                    oc = cols_out[op.name]
+                    step = (ob - oa) * _win_row_bytes(graph, op.output,
+                                                      oc[:2])
+                    for idx, rp in enumerate(plan.ins[op.name]):
+                        if rp is None:
+                            continue
+                        lo, hi, _, _ = rp
+                        cc = cols_ins[op.name][idx]
+                        assert cc is not None
+                        step += (hi - lo) * _win_row_bytes(
+                            graph, op.inputs[idx], cc[:2])
+                    slice_live = max(slice_live, step)
+                    w_op = _width(graph, op.output)
+                    assert w_op is not None
+                    # rows x retained columns, in per-full-row units x W
+                    work[op.name] = (work.get(op.name, 0)
+                                     + (ob - oa) * (oc[1] - oc[0]))
+        strip_peak = max(strip_peak, ring_bytes + slice_live)
     base_macs = extra_macs = 0
     for op in members:
         h = _height(graph, op.output)
-        assert h is not None
-        base_macs += h * _macs_per_row(graph, op)
-        extra = rows_done.get(op.name, 0) - h
-        extra_macs += max(0, extra) * _macs_per_row(graph, op)
+        w_op = _width(graph, op.output)
+        assert h is not None and w_op is not None
+        mpr = _macs_per_row(graph, op)
+        base_macs += h * mpr
+        extra_macs += max(0, work.get(op.name, 0) * mpr // w_op - h * mpr)
     frac = extra_macs / base_macs if base_macs else 0.0
-    return (ext_bytes + ring_bytes + out_bytes + slice_live, frac, rings,
-            extra_macs)
+    return (ext_bytes + out_bytes + strip_peak, frac, rings, extra_macs)
 
 
 def _cut_candidates(graph: Graph, run: Sequence[Operator]) -> List[int]:
@@ -856,11 +1042,19 @@ def plan_cascade(graph: Graph, budget: Optional[int] = None,
                  k_choices: Sequence[int] = (2, 3, 4, 6, 8, 12, 16),
                  max_cuts: int = 8,
                  min_rows_choices: Sequence[int] = (1, 2, 4),
-                 rate_div_choices: Sequence[int] = (1, 2, 4)
+                 rate_div_choices: Sequence[int] = (1, 2, 4),
+                 strips_choices: Sequence[int] = (1,)
                  ) -> List[Cascade]:
     """Choose, per sliceable run, the best (end, cut set, K, chunk floor,
-    rate divisor) — ranked like ``_choose_in_run``: meeting the budget
-    first, then estimated peak, halo overhead, K.
+    rate divisor, W-strip count) — ranked like ``_choose_in_run``: meeting
+    the budget first, then estimated peak, halo overhead, K.
+
+    ``strips_choices`` widens the search to 2-D tiled cascades: the whole
+    cascade re-runs once per W-strip with rings and working sets narrowed
+    to per-strip column windows (the MCUNetV2-style patch regime).  The
+    default ``(1,)`` searches only row cascades and is byte-identical to
+    the pre-2-D planner — the scheduler ladder escalates to strips > 1
+    only when row rings alone miss the budget.
 
     The cascade may **end early** — at the boundary right after a stride
     level, where the feature map is small — leaving the run's tail to
@@ -901,6 +1095,8 @@ def plan_cascade(graph: Graph, budget: Optional[int] = None,
             h_final = _height(graph, ops_e[-1].output)
             if h_final is None or h_final < 2 or len(ops_e) < 2:
                 continue
+            strips_e = [st for st in strips_choices
+                        if st == 1 or _strips_eligible(graph, ops_e, st)]
             tail_floor = (_local_baseline(graph, run[end:])
                           if end < len(run) else 0)
             ends_cuts = [c for c in cuts_all if c < end]
@@ -928,23 +1124,25 @@ def plan_cascade(graph: Graph, budget: Optional[int] = None,
                     for mr in min_rows_choices:
                         for rd in rate_div_choices:
                             caps = _cascade_caps(graph, segs, k, mr, rd)
-                            if caps in seen_caps:
-                                continue
-                            seen_caps.add(caps)
-                            est, frac, rings, extra = estimate_cascade(
-                                graph, segs, k, mr, rd)
-                            if frac > overhead_cap:
-                                continue
-                            est = max(est, tail_floor)
-                            meets = budget is not None and est <= budget
-                            key = (0 if meets else 1, est, frac, k, mr, rd)
-                            if best is None or key < best[0]:
-                                best = (key, segs, k, est, frac, rings,
-                                        mr, rd, extra)
+                            for st in strips_e:
+                                if (caps, st) in seen_caps:
+                                    continue
+                                seen_caps.add((caps, st))
+                                est, frac, rings, extra = estimate_cascade(
+                                    graph, segs, k, mr, rd, st)
+                                if frac > overhead_cap:
+                                    continue
+                                est = max(est, tail_floor)
+                                meets = budget is not None and est <= budget
+                                key = (0 if meets else 1, est, frac, k,
+                                       mr, rd, st)
+                                if best is None or key < best[0]:
+                                    best = (key, segs, k, est, frac, rings,
+                                            mr, rd, extra, st)
         if best is not None:
-            _, segs, k, est, frac, rings, mr, rd, extra = best
+            _, segs, k, est, frac, rings, mr, rd, extra, st = best
             cascades.append(Cascade(segs, k, rings, est, frac, mr, rd,
-                                    extra))
+                                    extra, st))
     return cascades
 
 
@@ -973,7 +1171,7 @@ def _ring_push_fn(dst: int, ring_rows: int, first: bool) -> Callable[..., Any]:
 
 
 def _emit_cascade(old: Graph, new: Graph, casc: Cascade) -> None:
-    segments, k = casc.segments, casc.k
+    segments, k, strips = casc.segments, casc.k, casc.strips
     m = len(segments)
     head = segments[0][0].name
     y = segments[-1][-1].output
@@ -984,149 +1182,234 @@ def _emit_cascade(old: Graph, new: Graph, casc: Cascade) -> None:
     slices, _ = cascade_slice_plans(old, segments, k, casc.min_rows,
                                     casc.rate_div)
 
-    extracts: Dict[Tuple[str, int, int], str] = {}
+    # W-strips: one (cstart, column-window maps) triple per outer pass.
+    # strips == 1 keeps cols == None everywhere, emitting byte-identical
+    # names / attrs / sizes to the pre-2-D emitter (the degenerate path).
+    if strips == 1:
+        strip_iter: List[Tuple[Optional[int], Any, Any]] = [(None, None,
+                                                             None)]
+    else:
+        w_final = _width(old, y)
+        assert w_final is not None
+        strip_iter = []
+        for ca, cb in _strip_bounds(w_final, strips):
+            cols_out, cols_ins = _backprop_cols(old, members, ca, cb)
+            strip_iter.append((ca, cols_out, cols_ins))
 
-    def extract(inp: str, lo: int, hi: int, phase: int) -> str:
-        key = (inp, lo, hi)
+    extracts: Dict[Tuple, str] = {}
+
+    # Dedup is scoped PER STRIP (the key carries the strip tag): a window
+    # shared across strips would stay live through the whole first strip —
+    # co-resident with its rings and working set — which the cost model
+    # never charges (``estimate_cascade`` prices windows only inside their
+    # own strip).  Re-extracting per strip costs a copy and keeps the
+    # estimate an upper bound.  strips == 1 has one tag, so the degenerate
+    # path deduplicates (and names) exactly as the pre-2-D emitter.
+    def extract(inp: str, lo: int, hi: int, phase: int,
+                cols: Optional[Tuple[int, int]], seg_tag: str,
+                sx: str) -> str:
+        key = (inp, lo, hi, cols, sx)
         if key not in extracts:
             t_in = old.tensors[inp]
-            tname = f"{inp}__cpex_{head}_{lo}_{hi}"
-            shape = (hi - lo,) + tuple(t_in.shape[1:]) if t_in.shape else ()
-            new.add_tensor(tname, (hi - lo) * _row_bytes(old, inp), shape,
-                           t_in.dtype)
+            attrs: Dict[str, Any] = {}
+            if cols is None:
+                tname = f"{inp}__cpex_{head}{sx}_{lo}_{hi}" if sx \
+                    else f"{inp}__cpex_{head}_{lo}_{hi}"
+                size = (hi - lo) * _row_bytes(old, inp)
+                shape = ((hi - lo,) + tuple(t_in.shape[1:])
+                         if t_in.shape else ())
+                fn = _slice_fn(lo, hi) if executable else None
+            else:
+                clo, chi = cols
+                tname = f"{inp}__cpex_{head}{sx}_{lo}_{hi}_{clo}_{chi}"
+                size = (hi - lo) * _win_row_bytes(old, inp, cols)
+                shape = (hi - lo, chi - clo) + tuple(t_in.shape[2:])
+                fn = _slice_fn(lo, hi, clo, chi) if executable else None
+                attrs["pex_cols"] = (clo, chi)
+            new.add_tensor(tname, size, shape, t_in.dtype)
             new.add_operator(f"cpexsl__{head}_{len(extracts)}", [inp], tname,
-                             kind="pex_slice",
-                             fn=_slice_fn(lo, hi) if executable else None,
-                             pex_seg=head, pex_slice_idx=phase,
-                             pex_rows=(lo, hi))
+                             kind="pex_slice", fn=fn,
+                             pex_seg=seg_tag, pex_slice_idx=phase,
+                             pex_rows=(lo, hi), **attrs)
             extracts[key] = tname
         return extracts[key]
 
-    ring_cur: List[Optional[str]] = [None] * (m - 1)
     acc_prev: Optional[str] = None
-    for s, cs in enumerate(slices):
-        # group index for the compiled executor's fori_loop rolling: with a
-        # rate divisor the steady-state structure repeats every rate_div
-        # iterations, so the whole super-period is one rollable group
-        phase = s // casc.rate_div
-        for i, seg in enumerate(segments):
-            d_lo, d_hi = cs.deltas[i]
-            if d_hi <= d_lo:
-                continue
-            plan = cs.plans[i]
-            assert plan is not None
-            for d, op in enumerate(seg):
-                spec = spec_of(op)
-                assert spec is not None
-                oa, ob = plan.out[op.name]
-                pads = (0, 0)
-                ins: List[str] = []
-                for idx, inp in enumerate(op.inputs):
-                    rp = plan.ins[op.name][idx]
-                    if rp is None:
-                        ins.append(inp)            # consumed whole
-                        continue
-                    lo, hi, top, bottom = rp
-                    if top or bottom:
-                        pads = (top, bottom)
-                    if d > 0 and inp == seg[d - 1].output:
-                        ins.append(f"{inp}__cpex{s}")
-                    elif (d == 0 and i > 0
-                          and inp == segments[i - 1][-1].output):
-                        # halo'd window out of the predecessor's ring
-                        ring = ring_cur[i - 1]
-                        assert ring is not None
-                        ring_rows = casc.ring_rows[i - 1]
-                        t_b = old.tensors[inp]
-                        rname = f"{inp}__rw{s}"
-                        shape = ((hi - lo,) + tuple(t_b.shape[1:])
-                                 if t_b.shape else ())
-                        new.add_tensor(rname,
-                                       (hi - lo) * _row_bytes(old, inp),
-                                       shape, t_b.dtype)
-                        new.add_operator(
-                            f"cpexrd__{head}_{i}_{s}", [ring], rname,
-                            kind="pex_ring_read",
-                            fn=(_ring_read_fn(lo, hi - lo, ring_rows)
-                                if executable else None),
-                            pex_seg=head, pex_slice_idx=phase,
-                            pex_ring_rows=ring_rows, pex_ring_src=lo)
-                        ins.append(rname)
+    for j, (cstart, cols_out, cols_ins) in enumerate(strip_iter):
+        sx = "" if strips == 1 else f"c{j}"
+        seg_tag = head if strips == 1 else f"{head}@c{j}"
+        ring_cur: List[Optional[str]] = [None] * (m - 1)
+        for s, cs in enumerate(slices):
+            # group index for the compiled executor's fori_loop rolling:
+            # with a rate divisor the steady-state structure repeats every
+            # rate_div iterations, so the super-period is one rollable group
+            phase = s // casc.rate_div
+            for i, seg in enumerate(segments):
+                d_lo, d_hi = cs.deltas[i]
+                if d_hi <= d_lo:
+                    continue
+                plan = cs.plans[i]
+                assert plan is not None
+                for d, op in enumerate(seg):
+                    spec = spec_of(op)
+                    assert spec is not None
+                    oa, ob = plan.out[op.name]
+                    oc = None if cols_out is None else cols_out[op.name]
+                    pads = (0, 0)
+                    wpads = (0, 0)
+                    ins: List[str] = []
+                    for idx, inp in enumerate(op.inputs):
+                        rp = plan.ins[op.name][idx]
+                        if rp is None:
+                            ins.append(inp)            # consumed whole
+                            continue
+                        cc = (None if cols_ins is None
+                              else cols_ins[op.name][idx])
+                        lo, hi, top, bottom = rp
+                        if top or bottom:
+                            pads = (top, bottom)
+                        if cc is not None and (cc[2] or cc[3]):
+                            wpads = (cc[2], cc[3])
+                        if d > 0 and inp == seg[d - 1].output:
+                            ins.append(f"{inp}__cpex{s}{sx}")
+                        elif (d == 0 and i > 0
+                              and inp == segments[i - 1][-1].output):
+                            # halo'd window out of the predecessor's ring
+                            ring = ring_cur[i - 1]
+                            assert ring is not None
+                            ring_rows = casc.ring_rows[i - 1]
+                            t_b = old.tensors[inp]
+                            rname = f"{inp}__rw{s}{sx}"
+                            if cc is None:
+                                rbytes = (hi - lo) * _row_bytes(old, inp)
+                                shape = ((hi - lo,) + tuple(t_b.shape[1:])
+                                         if t_b.shape else ())
+                            else:
+                                rbytes = (hi - lo) * _win_row_bytes(
+                                    old, inp, cc[:2])
+                                shape = ((hi - lo, cc[1] - cc[0])
+                                         + tuple(t_b.shape[2:]))
+                            new.add_tensor(rname, rbytes, shape, t_b.dtype)
+                            new.add_operator(
+                                f"cpexrd__{head}_{i}_{s}{sx}", [ring], rname,
+                                kind="pex_ring_read",
+                                fn=(_ring_read_fn(lo, hi - lo, ring_rows)
+                                    if executable else None),
+                                pex_seg=seg_tag, pex_slice_idx=phase,
+                                pex_ring_rows=ring_rows, pex_ring_src=lo)
+                            ins.append(rname)
+                        else:
+                            ins.append(extract(inp, lo, hi, phase,
+                                               None if cc is None
+                                               else cc[:2], seg_tag, sx))
+                    t_out = old.tensors[op.output]
+                    oname = f"{op.output}__cpex{s}{sx}"
+                    if oc is None:
+                        obytes = (ob - oa) * _row_bytes(old, op.output)
+                        shape = ((ob - oa,) + tuple(t_out.shape[1:])
+                                 if t_out.shape else ())
                     else:
-                        ins.append(extract(inp, lo, hi, phase))
-                t_out = old.tensors[op.output]
-                oname = f"{op.output}__cpex{s}"
-                shape = ((ob - oa,) + tuple(t_out.shape[1:])
-                         if t_out.shape else ())
-                new.add_tensor(oname, (ob - oa) * _row_bytes(old, op.output),
-                               shape, t_out.dtype)
-                attrs = {a: v for a, v in op.attrs.items() if a != PEX_ATTR}
-                attrs["pex_of"] = op.name
-                attrs["pex_seg"] = head
-                attrs["pex_slice_idx"] = phase
-                attrs["pex_pads"] = pads
-                fn = (spec.make_fn(op, pads[0], pads[1])
-                      if executable else None)   # type: ignore[misc]
-                new.add_operator(f"{op.name}__cpex{s}", ins, oname,
-                                 kind=op.kind, fn=fn, **attrs)
-            part = f"{seg[-1].output}__cpex{s}"
-            if i < m - 1:
-                # rolling push of the delta rows into this boundary's ring
-                boundary = seg[-1].output
-                ring_rows = casc.ring_rows[i]
-                t_b = old.tensors[boundary]
-                ring_name = f"{boundary}__ring{s}"
-                shape = ((ring_rows,) + tuple(t_b.shape[1:])
-                         if t_b.shape else ())
-                new.add_tensor(ring_name,
-                               ring_rows * _row_bytes(old, boundary),
-                               shape, t_b.dtype)
-                first = ring_cur[i] is None
-                if first:
-                    new.add_operator(
-                        f"cpexpu__{head}_{i}_{s}", [part], ring_name,
-                        kind="pex_ring_push",
-                        fn=(_ring_push_fn(d_lo, ring_rows, True)
-                            if executable else None),
-                        pex_seg=head, pex_slice_idx=phase,
-                        pex_ring_rows=ring_rows, pex_ring_dst=d_lo,
-                        pex_first=True)
+                        obytes = (ob - oa) * _win_row_bytes(old, op.output,
+                                                            oc)
+                        shape = ((ob - oa, oc[1] - oc[0])
+                                 + tuple(t_out.shape[2:]))
+                    new.add_tensor(oname, obytes, shape, t_out.dtype)
+                    attrs = {a: v for a, v in op.attrs.items()
+                             if a != PEX_ATTR}
+                    attrs["pex_of"] = op.name
+                    attrs["pex_seg"] = seg_tag
+                    attrs["pex_slice_idx"] = phase
+                    attrs["pex_pads"] = pads
+                    if oc is None:
+                        fn = (spec.make_fn(op, pads[0], pads[1])
+                              if executable else None)  # type: ignore[misc]
+                    else:
+                        attrs["pex_wpads"] = wpads
+                        fn = (spec.make_fn(op, pads[0], pads[1],  # type: ignore[call-arg]
+                                           wpads[0], wpads[1])
+                              if executable else None)  # type: ignore[misc]
+                    new.add_operator(f"{op.name}__cpex{s}{sx}", ins, oname,
+                                     kind=op.kind, fn=fn, **attrs)
+                part = f"{seg[-1].output}__cpex{s}{sx}"
+                if i < m - 1:
+                    # rolling push of the delta rows into the boundary ring
+                    boundary = seg[-1].output
+                    bc = (None if cols_out is None
+                          else cols_out[seg[-1].name])
+                    ring_rows = casc.ring_rows[i]
+                    t_b = old.tensors[boundary]
+                    ring_name = f"{boundary}__ring{s}{sx}"
+                    if bc is None:
+                        rbytes = ring_rows * _row_bytes(old, boundary)
+                        shape = ((ring_rows,) + tuple(t_b.shape[1:])
+                                 if t_b.shape else ())
+                    else:
+                        rbytes = ring_rows * _win_row_bytes(old, boundary,
+                                                            bc)
+                        shape = ((ring_rows, bc[1] - bc[0])
+                                 + tuple(t_b.shape[2:]))
+                    new.add_tensor(ring_name, rbytes, shape, t_b.dtype)
+                    first = ring_cur[i] is None
+                    if first:
+                        new.add_operator(
+                            f"cpexpu__{head}_{i}_{s}{sx}", [part], ring_name,
+                            kind="pex_ring_push",
+                            fn=(_ring_push_fn(d_lo, ring_rows, True)
+                                if executable else None),
+                            pex_seg=seg_tag, pex_slice_idx=phase,
+                            pex_ring_rows=ring_rows, pex_ring_dst=d_lo,
+                            pex_first=True)
+                    else:
+                        new.add_operator(
+                            f"cpexpu__{head}_{i}_{s}{sx}", [ring_cur[i],
+                                                            part],
+                            ring_name, kind="pex_ring_push",
+                            fn=(_ring_push_fn(d_lo, ring_rows, False)
+                                if executable else None),
+                            inplace=True, inplace_input=ring_cur[i],
+                            pex_seg=seg_tag, pex_slice_idx=phase,
+                            pex_ring_rows=ring_rows, pex_ring_dst=d_lo,
+                            pex_first=False)
+                    ring_cur[i] = ring_name
                 else:
-                    new.add_operator(
-                        f"cpexpu__{head}_{i}_{s}", [ring_cur[i], part],
-                        ring_name, kind="pex_ring_push",
-                        fn=(_ring_push_fn(d_lo, ring_rows, False)
-                            if executable else None),
-                        inplace=True, inplace_input=ring_cur[i],
-                        pex_seg=head, pex_slice_idx=phase,
-                        pex_ring_rows=ring_rows, pex_ring_dst=d_lo,
-                        pex_first=False)
-                ring_cur[i] = ring_name
-            else:
-                start = d_lo
-                last = s == len(slices) - 1   # final delta ends the output
-                out_name = y if last else f"{y}__cpexacc{s}"
-                if not last:
-                    new.add_tensor(out_name, ty.size, ty.shape, ty.dtype)
-                if acc_prev is None:
-                    new.add_operator(f"cpexcat__{head}_{s}", [part],
-                                     out_name, kind="pex_concat",
-                                     fn=(_concat_fn(start, tuple(ty.shape),
-                                                    True)
-                                         if executable else None),
-                                     pex_seg=head, pex_slice_idx=phase,
-                                     pex_start=start, pex_first=True)
-                else:
-                    new.add_operator(f"cpexcat__{head}_{s}",
-                                     [acc_prev, part], out_name,
-                                     kind="pex_concat",
-                                     fn=(_concat_fn(start, tuple(ty.shape),
-                                                    False)
-                                         if executable else None),
-                                     inplace=True, inplace_input=acc_prev,
-                                     pex_seg=head, pex_slice_idx=phase,
-                                     pex_start=start, pex_first=False)
-                acc_prev = out_name
+                    start = d_lo
+                    # the accumulator spans strips: only the very last
+                    # delta of the very last strip completes the output
+                    last = (s == len(slices) - 1
+                            and j == len(strip_iter) - 1)
+                    out_name = y if last else f"{y}__cpexacc{s}{sx}"
+                    if not last:
+                        new.add_tensor(out_name, ty.size, ty.shape,
+                                       ty.dtype)
+                    cat_attrs: Dict[str, Any] = {}
+                    if cstart is not None:
+                        cat_attrs["pex_cstart"] = cstart
+                    if acc_prev is None:
+                        new.add_operator(f"cpexcat__{head}_{s}{sx}", [part],
+                                         out_name, kind="pex_concat",
+                                         fn=(_concat_fn(start,
+                                                        tuple(ty.shape),
+                                                        True, cstart)
+                                             if executable else None),
+                                         pex_seg=seg_tag,
+                                         pex_slice_idx=phase,
+                                         pex_start=start, pex_first=True,
+                                         **cat_attrs)
+                    else:
+                        new.add_operator(f"cpexcat__{head}_{s}{sx}",
+                                         [acc_prev, part], out_name,
+                                         kind="pex_concat",
+                                         fn=(_concat_fn(start,
+                                                        tuple(ty.shape),
+                                                        False, cstart)
+                                             if executable else None),
+                                         inplace=True,
+                                         inplace_input=acc_prev,
+                                         pex_seg=seg_tag,
+                                         pex_slice_idx=phase,
+                                         pex_start=start, pex_first=False,
+                                         **cat_attrs)
+                    acc_prev = out_name
 
 
 @dataclasses.dataclass
@@ -1179,12 +1462,27 @@ def apply_cascade(graph: Graph, cascades: Sequence[Cascade]) -> Graph:
 
 def cascade_graph(graph: Graph, budget: Optional[int] = None,
                   max_k: int = 16, overhead_cap: float = 0.25,
-                  k_choices: Sequence[int] = (2, 3, 4, 6, 8, 12, 16)
+                  k_choices: Sequence[int] = (2, 3, 4, 6, 8, 12, 16),
+                  strips_choices: Sequence[int] = (1,),
+                  rf_redistribute: Optional[Tuple[str, str]] = None
                   ) -> CascadeResult:
     """One-stop cascaded-streaming transform: plan cut sets / K against
     ``budget`` and rewrite the graph.  Returns the input graph unchanged
-    (``result.graph is graph``) when no run can cascade."""
-    cascades = plan_cascade(graph, budget, max_k, overhead_cap, k_choices)
+    (``result.graph is graph``) when no run can cascade.
+
+    ``rf_redistribute`` is the MCUNetV2-style planner option: an explicit
+    ``(shrink_op, grow_op)`` pair handed to
+    ``graphs.cnn_ops.redistribute_receptive_field`` before planning —
+    kernel reach moves from the early (halo-expensive) op to a later one,
+    so 2-D tiling's per-axis halo bill shrinks while total network reach
+    is conserved.  The shrink leg is a flagged model edit (see the
+    transform's docstring), which is why it is opt-in per op pair and
+    never chosen silently by the planner."""
+    if rf_redistribute is not None:
+        from repro.graphs.cnn_ops import redistribute_receptive_field
+        graph = redistribute_receptive_field(graph, *rf_redistribute)
+    cascades = plan_cascade(graph, budget, max_k, overhead_cap, k_choices,
+                            strips_choices=strips_choices)
     if not cascades:
         return CascadeResult(graph, [], graph_macs(graph))
     return CascadeResult(apply_cascade(graph, cascades), cascades,

@@ -52,19 +52,30 @@ def _pads(n: int, k: int, stride: int) -> Tuple[int, int]:
 # ----------------------------------------------------- slice-spec factories
 def _windowed_slice_fn(kernel_name: str, attr_names: Tuple[str, ...]):
     """make_fn factory for windowed kernels: reads the kernel's extra args
-    from op.attrs and rebuilds it with explicit height padding."""
-    def make(op: Operator, pad_top: int, pad_bottom: int):
+    from op.attrs and rebuilds it with explicit height padding — and, for
+    2-D tile clones, explicit width padding.  1-D callers pass two pads and
+    get the legacy closure (no ``wpad`` argument at all), so the row-ring
+    path traces byte-identical jaxprs."""
+    def make(op: Operator, pad_top: int, pad_bottom: int,
+             pad_left: Optional[int] = None, pad_right: Optional[int] = None):
         kernel = globals()[kernel_name]
         args = tuple(op.attrs[a] for a in attr_names)
 
-        def fn(x, kernel=kernel, args=args, hpad=(pad_top, pad_bottom)):
-            return kernel(x, *args, hpad=hpad)
+        if pad_left is None:
+            def fn(x, kernel=kernel, args=args, hpad=(pad_top, pad_bottom)):
+                return kernel(x, *args, hpad=hpad)
+        else:
+            def fn(x, kernel=kernel, args=args, hpad=(pad_top, pad_bottom),
+                   wpad=(pad_left, pad_right)):
+                return kernel(x, *args, hpad=hpad, wpad=wpad)
         return fn
     return make
 
 
-def _elementwise_slice_fn(op: Operator, pad_top: int, pad_bottom: int):
+def _elementwise_slice_fn(op: Operator, pad_top: int, pad_bottom: int,
+                          pad_left: int = 0, pad_right: int = 0):
     assert pad_top == 0 and pad_bottom == 0
+    assert pad_left in (0, None) and pad_right in (0, None)
     return op.fn
 
 
@@ -225,28 +236,32 @@ class CNNBuilder:
                           weight_bytes=wgt.nbytes)
 
 
-def conv2d(x, w, stride: int, hpad: Optional[Tuple[int, int]] = None):
+def conv2d(x, w, stride: int, hpad: Optional[Tuple[int, int]] = None,
+           wpad: Optional[Tuple[int, int]] = None):
     """x: (H,W,Cin) f32; w: (k,k,Cin,Cout); SAME padding; relu.
 
     ``hpad`` overrides the height padding with an explicit (top, bottom)
     pair — partial execution uses this to run a slice whose interior edges
     get their halo rows from the input window instead of zero padding.
-    SAME is reproduced exactly when ``hpad`` is None.
+    ``wpad`` is the width-axis twin, used by 2-D tile clones whose column
+    windows carry their own halos.  SAME is reproduced exactly when either
+    is None.
     """
     k = w.shape[0]
     hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
-    wp = _pads(x.shape[1], w.shape[1], stride)
+    wp = _pads(x.shape[1], w.shape[1], stride) if wpad is None else tuple(wpad)
     y = lax.conv_general_dilated(
         x[None], w, window_strides=(stride, stride), padding=[hp, wp],
         dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
     return jnp.maximum(y, 0.0)
 
 
-def dwconv2d(x, w, stride: int, hpad: Optional[Tuple[int, int]] = None):
+def dwconv2d(x, w, stride: int, hpad: Optional[Tuple[int, int]] = None,
+             wpad: Optional[Tuple[int, int]] = None):
     cin = x.shape[-1]
     k = w.shape[0]
     hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
-    wp = _pads(x.shape[1], w.shape[1], stride)
+    wp = _pads(x.shape[1], w.shape[1], stride) if wpad is None else tuple(wpad)
     y = lax.conv_general_dilated(
         x[None], jnp.reshape(jnp.transpose(w, (0, 1, 3, 2)), (w.shape[0], w.shape[1], 1, cin)),
         window_strides=(stride, stride), padding=[hp, wp],
@@ -256,11 +271,12 @@ def dwconv2d(x, w, stride: int, hpad: Optional[Tuple[int, int]] = None):
 
 
 def maxpool2d(x, k: int, stride: int,
-              hpad: Optional[Tuple[int, int]] = None):
+              hpad: Optional[Tuple[int, int]] = None,
+              wpad: Optional[Tuple[int, int]] = None):
     """SAME max-pooling over (H, W); padding rows take the -inf identity, so
     explicit-pad slices are bit-identical to the full op."""
     hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
-    wp = _pads(x.shape[1], k, stride)
+    wp = _pads(x.shape[1], k, stride) if wpad is None else tuple(wpad)
     return lax.reduce_window(x, -jnp.inf, lax.max, (k, k, 1),
                              (stride, stride, 1), (hp, wp, (0, 0)))
 
@@ -302,12 +318,13 @@ def dequantize_array(q, scale: float, zp: int):
 
 
 def qconv2d(x, w, stride: int, mult: float, zp_in: int, zp_out: int,
-            hpad: Optional[Tuple[int, int]] = None):
+            hpad: Optional[Tuple[int, int]] = None,
+            wpad: Optional[Tuple[int, int]] = None):
     """x: (H,W,Cin) int8; w: (k,k,Cin,Cout) int8; SAME padding; fused relu
-    (lower clamp at ``zp_out``).  ``hpad`` as in ``conv2d``."""
+    (lower clamp at ``zp_out``).  ``hpad``/``wpad`` as in ``conv2d``."""
     k = w.shape[0]
     hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
-    wp = _pads(x.shape[1], w.shape[1], stride)
+    wp = _pads(x.shape[1], w.shape[1], stride) if wpad is None else tuple(wpad)
     xi = x.astype(jnp.int32) - zp_in       # pad rows become 0 == zp_in
     acc = lax.conv_general_dilated(
         xi[None], jnp.asarray(w, jnp.int32), window_strides=(stride, stride),
@@ -316,11 +333,12 @@ def qconv2d(x, w, stride: int, mult: float, zp_in: int, zp_out: int,
 
 
 def qdwconv2d(x, w, stride: int, mult: float, zp_in: int, zp_out: int,
-              hpad: Optional[Tuple[int, int]] = None):
+              hpad: Optional[Tuple[int, int]] = None,
+              wpad: Optional[Tuple[int, int]] = None):
     cin = x.shape[-1]
     k = w.shape[0]
     hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
-    wp = _pads(x.shape[1], w.shape[1], stride)
+    wp = _pads(x.shape[1], w.shape[1], stride) if wpad is None else tuple(wpad)
     xi = x.astype(jnp.int32) - zp_in
     wi = jnp.reshape(jnp.transpose(jnp.asarray(w, jnp.int32), (0, 1, 3, 2)),
                      (w.shape[0], w.shape[1], 1, cin))
@@ -332,20 +350,47 @@ def qdwconv2d(x, w, stride: int, mult: float, zp_in: int, zp_out: int,
 
 
 def qmaxpool2d(x, k: int, stride: int,
-               hpad: Optional[Tuple[int, int]] = None):
+               hpad: Optional[Tuple[int, int]] = None,
+               wpad: Optional[Tuple[int, int]] = None):
     """Max-pooling is order-preserving, so scale/zero-point pass through;
     padding takes the int8 identity -128 (mirrors the f32 -inf)."""
     hp = _pads(x.shape[0], k, stride) if hpad is None else tuple(hpad)
-    wp = _pads(x.shape[1], k, stride)
+    wp = _pads(x.shape[1], k, stride) if wpad is None else tuple(wpad)
     return lax.reduce_window(x, np.int8(INT8_MIN), lax.max, (k, k, 1),
                              (stride, stride, 1), (hp, wp, (0, 0)))
 
 
+# qadd runs in fixed point: the two rescale multipliers are quantized to
+# QADD_SHIFT fractional bits at trace time and the whole op is int32
+# arithmetic + an integer round-half-even.  A float formulation
+# (``round((a-zp_a)*mult_a + (b-zp_b)*mult_b)``) is NOT bit-stable across
+# execution contexts: XLA CPU codegen contracts the mul->add into an FMA
+# under jit (optimization_barrier/bitcast do not survive codegen), so the
+# eager interpreter and the jitted compiled executor disagreed by +-1 on
+# exact-half ties.  Integer ops cannot be contracted, so this sequence is
+# bit-identical everywhere — eager, jit, and inside Pallas kernels (the
+# fused conv->add kernel replays it literally).
+QADD_SHIFT = 16
+
+
+def _round_half_even_rshift(acc, shift: int):
+    """Round-half-even of ``acc / 2**shift`` in pure integer arithmetic
+    (``acc`` any signed int array; arithmetic right shift floors)."""
+    base = acc >> shift
+    rem = acc - (base << shift)          # in [0, 2**shift)
+    half = 1 << (shift - 1)
+    return jnp.where(rem > half, base + 1,
+                     jnp.where(rem < half, base, base + (base & 1)))
+
+
 def qadd(a, b, mult_a: float, mult_b: float, zp_a: int, zp_b: int,
          zp_out: int):
-    ya = (a.astype(jnp.float32) - zp_a) * jnp.float32(mult_a)
-    yb = (b.astype(jnp.float32) - zp_b) * jnp.float32(mult_b)
-    y = jnp.round(ya + yb) + zp_out
+    ma = int(round(float(mult_a) * (1 << QADD_SHIFT)))
+    mb = int(round(float(mult_b) * (1 << QADD_SHIFT)))
+    assert abs(ma) + abs(mb) <= (1 << 23), "qadd multipliers too large"
+    acc = ((a.astype(jnp.int32) - zp_a) * ma
+           + (b.astype(jnp.int32) - zp_b) * mb)
+    y = _round_half_even_rshift(acc, QADD_SHIFT) + zp_out
     return jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int8)
 
 
@@ -373,6 +418,144 @@ def qconcat(*xs, mults: Sequence[float], zps: Sequence[int], zp_out: int):
     return jnp.concatenate(parts, axis=-1)
 
 
+# ----------------------------------------- receptive-field redistribution
+# 2-D tiled cascades pay halo recompute along BOTH spatial axes, and the
+# bill scales with the receptive field of the early (high-resolution) ops.
+# MCUNetV2's "receptive field redistribution" shifts kernel reach from the
+# expensive early stage to the cheap late stage: shrink an early kernel to
+# its center tap (a flagged MODEL EDIT — accuracy must be re-validated by
+# retraining, which is out of scope here) and grow a late kernel by
+# zero-embedding (function-preserving: a zero tap contributes exactly 0 to
+# the int32/f32 accumulation, so outputs stay bit-identical while the
+# planner sees — and prices — the larger reach).  ``cascade_graph(...,
+# rf_redistribute=(shrink_op, grow_op))`` applies the pair before planning.
+_RF_KINDS = ("conv", "dwconv", "qconv", "qdwconv")
+
+
+def _rf_op(graph: Graph, op_name: str) -> Operator:
+    for op in graph.operators:
+        if op.name == op_name:
+            if op.kind not in _RF_KINDS:
+                raise ValueError(
+                    f"receptive-field edit needs a conv kind, {op_name!r} "
+                    f"is {op.kind!r}")
+            return op
+    raise KeyError(op_name)
+
+
+def _rf_rebuild(graph: Graph, op: Operator, new_w: Optional[np.ndarray],
+                new_k: int, rf_edit: str) -> Graph:
+    """Copy of ``graph`` with ``op`` rebuilt at kernel size ``new_k``:
+    weights/attrs/fn/SliceSpec all refreshed so the planner's halo maps and
+    the executable semantics agree on the new reach."""
+    wkey = "weight_q" if op.kind.startswith("q") else "weight"
+    attrs = {a: v for a, v in op.attrs.items() if a != PEX_ATTR}
+    old_k = attrs["k"]
+    stride = attrs["stride"]
+    attrs["k"] = new_k
+    attrs["rf_edit"] = rf_edit
+    if new_w is not None:
+        attrs[wkey] = new_w
+        attrs["weight_bytes"] = new_w.nbytes
+    elif "weight_bytes" in attrs:
+        # scheduling-only graphs carry no weights: scale flash accounting
+        attrs["weight_bytes"] = (attrs["weight_bytes"] * new_k * new_k
+                                 // (old_k * old_k))
+    out_shape = tuple(graph.tensors[op.output].shape)
+    in_shape = graph.tensors[op.inputs[0]].shape
+    cin = in_shape[-1] if in_shape else 1
+    spec = pex_spec(op.kind, out_shape, cin, new_k, stride)
+    if spec is not None:
+        attrs[PEX_ATTR] = spec
+    fn = None
+    if new_w is not None and op.fn is not None:
+        if op.kind == "conv":
+            def fn(a, w=new_w, s=stride):
+                return conv2d(a, w, s)
+        elif op.kind == "dwconv":
+            def fn(a, w=new_w, s=stride):
+                return dwconv2d(a, w, s)
+        else:
+            kern = qconv2d if op.kind == "qconv" else qdwconv2d
+            def fn(a, kern=kern, w=new_w, at=dict(attrs)):
+                return kern(a, w, at["stride"], at["mult"], at["zp_in"],
+                            at["zp_out"])
+    new = Graph()
+    for tname, t in graph.tensors.items():
+        new.add_tensor(tname, t.size, t.shape, t.dtype)
+    for o in graph.operators:
+        if o.name == op.name:
+            new.add_operator(o.name, list(o.inputs), o.output, kind=o.kind,
+                             fn=fn, **attrs)
+        else:
+            new.add_operator(o.name, list(o.inputs), o.output, kind=o.kind,
+                             fn=o.fn, **o.attrs)
+    new.set_outputs(graph.outputs)
+    return new
+
+
+def grow_kernel(graph: Graph, op_name: str,
+                new_k: Optional[int] = None) -> Graph:
+    """Zero-embed ``op_name``'s kernel into a ``new_k``×``new_k`` one
+    (default k+2).  Function-preserving — bit-identical outputs: the
+    embedded taps read exactly the rows/cols the original taps read (the
+    embed offset equals the SAME pad growth), and the new zero taps
+    contribute exactly 0 to the accumulation."""
+    op = _rf_op(graph, op_name)
+    k, stride = op.attrs["k"], op.attrs["stride"]
+    new_k = k + 2 if new_k is None else new_k
+    if new_k < k:
+        raise ValueError(f"grow_kernel: new_k {new_k} < k {k}")
+    h_in, w_in = graph.tensors[op.inputs[0]].shape[:2]
+    eh = same_pads(h_in, new_k, stride)[1] - same_pads(h_in, k, stride)[1]
+    ew = same_pads(w_in, new_k, stride)[1] - same_pads(w_in, k, stride)[1]
+    assert 0 <= eh <= new_k - k and 0 <= ew <= new_k - k, (eh, ew, k, new_k)
+    wkey = "weight_q" if op.kind.startswith("q") else "weight"
+    old_w = op.attrs.get(wkey)
+    new_w = None
+    if old_w is not None:
+        new_w = np.zeros((new_k, new_k) + old_w.shape[2:], old_w.dtype)
+        new_w[eh:eh + k, ew:ew + k] = old_w
+    return _rf_rebuild(graph, op, new_w, new_k, "grow")
+
+
+def shrink_kernel(graph: Graph, op_name: str) -> Graph:
+    """Shrink ``op_name``'s kernel to its center tap (k -> 1).  A flagged
+    MODEL EDIT (``attrs['rf_edit'] == 'shrink'``): outputs change, reach
+    drops to 1, and the planner's halo/extra-MACs bill shrinks with it.
+    Pairs with ``grow_kernel`` on a later op to conserve network reach."""
+    op = _rf_op(graph, op_name)
+    k, stride = op.attrs["k"], op.attrs["stride"]
+    if k == 1:
+        return graph
+    h_in, w_in = graph.tensors[op.inputs[0]].shape[:2]
+    # the tap that reads input row i*stride — what a 1x1 SAME kernel reads
+    pb_h = same_pads(h_in, k, stride)[1]
+    pb_w = same_pads(w_in, k, stride)[1]
+    assert 0 <= pb_h < k and 0 <= pb_w < k, (pb_h, pb_w, k)
+    wkey = "weight_q" if op.kind.startswith("q") else "weight"
+    old_w = op.attrs.get(wkey)
+    new_w = None
+    if old_w is not None:
+        new_w = np.ascontiguousarray(old_w[pb_h:pb_h + 1, pb_w:pb_w + 1])
+    return _rf_rebuild(graph, op, new_w, 1, "shrink")
+
+
+def redistribute_receptive_field(graph: Graph, shrink: str, grow: str,
+                                 grow_k: Optional[int] = None) -> Graph:
+    """The MCUNetV2-style planner option: move kernel reach from an early
+    op (``shrink`` -> center tap) to a later one (``grow`` zero-embedded to
+    ``grow_k``, default its k plus the reach the shrink dropped).  The
+    result carries ``rf_edit`` flags on both ops; the grow leg alone is
+    bit-identical, the pair is a model edit gated behind explicit opt-in."""
+    s_op = _rf_op(graph, shrink)
+    g_op = _rf_op(graph, grow)
+    if grow_k is None:
+        grow_k = g_op.attrs["k"] + max(0, s_op.attrs["k"] - 1)
+    out = shrink_kernel(graph, shrink)
+    return grow_kernel(out, grow, grow_k)
+
+
 # ------------------------------------------------- compiled-executor lowering
 # Rules for the compiled arena executor (mcu/compile.py) live next to the
 # semantics they mirror.  Each rule rebuilds the op's computation from attrs
@@ -396,19 +579,22 @@ def _lower_conv(ctx, op: Operator, x):
         from repro.kernels import conv1x1_fused
         return conv1x1_fused(x, jnp.asarray(w)[0, 0], relu=True,
                              interpret=ctx.interpret)
-    return conv2d(x, w, stride, hpad=op.attrs.get("pex_pads"))
+    return conv2d(x, w, stride, hpad=op.attrs.get("pex_pads"),
+                  wpad=op.attrs.get("pex_wpads"))
 
 
 @register_lowering("dwconv")
 def _lower_dwconv(ctx, op: Operator, x):
     return dwconv2d(x, op.attrs["weight"], op.attrs["stride"],
-                    hpad=op.attrs.get("pex_pads"))
+                    hpad=op.attrs.get("pex_pads"),
+                    wpad=op.attrs.get("pex_wpads"))
 
 
 @register_lowering("maxpool")
 def _lower_maxpool(ctx, op: Operator, x):
     return maxpool2d(x, op.attrs["k"], op.attrs["stride"],
-                     hpad=op.attrs.get("pex_pads"))
+                     hpad=op.attrs.get("pex_pads"),
+                     wpad=op.attrs.get("pex_wpads"))
 
 
 @register_lowering("add")
@@ -419,37 +605,40 @@ def _lower_add(ctx, op: Operator, x, y):
 @register_lowering("qconv")
 def _lower_qconv(ctx, op: Operator, x):
     a = op.attrs
-    hpad = a.get("pex_pads")
+    hpad, wpad = a.get("pex_pads"), a.get("pex_wpads")
     if ctx.use_pallas and x.ndim == 3:
         from repro.kernels import qconv_fused
         return qconv_fused(x, jnp.asarray(a["weight_q"]), stride=a["stride"],
                            mult=a["mult"], zp_in=a["zp_in"],
                            zp_out=a["zp_out"],
                            hpad=None if hpad is None else tuple(hpad),
+                           wpad=None if wpad is None else tuple(wpad),
                            interpret=ctx.interpret)
     return qconv2d(x, a["weight_q"], a["stride"], a["mult"], a["zp_in"],
-                   a["zp_out"], hpad=hpad)
+                   a["zp_out"], hpad=hpad, wpad=wpad)
 
 
 @register_lowering("qdwconv")
 def _lower_qdwconv(ctx, op: Operator, x):
     a = op.attrs
-    hpad = a.get("pex_pads")
+    hpad, wpad = a.get("pex_pads"), a.get("pex_wpads")
     if ctx.use_pallas and x.ndim == 3:
         from repro.kernels import qdwconv_fused
         return qdwconv_fused(x, jnp.asarray(a["weight_q"]),
                              stride=a["stride"], mult=a["mult"],
                              zp_in=a["zp_in"], zp_out=a["zp_out"],
                              hpad=None if hpad is None else tuple(hpad),
+                             wpad=None if wpad is None else tuple(wpad),
                              interpret=ctx.interpret)
     return qdwconv2d(x, a["weight_q"], a["stride"], a["mult"], a["zp_in"],
-                     a["zp_out"], hpad=hpad)
+                     a["zp_out"], hpad=hpad, wpad=wpad)
 
 
 @register_lowering("qmaxpool")
 def _lower_qmaxpool(ctx, op: Operator, x):
     return qmaxpool2d(x, op.attrs["k"], op.attrs["stride"],
-                      hpad=op.attrs.get("pex_pads"))
+                      hpad=op.attrs.get("pex_pads"),
+                      wpad=op.attrs.get("pex_wpads"))
 
 
 @register_lowering("qadd")

@@ -45,6 +45,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 INT8_MAX = 127
+INT8_MIN = -128
 
 
 def _require_int8(name: str, arr) -> None:
@@ -60,6 +61,33 @@ def _requant(acc, mult: float, zp_out: int, lo: int):
     # contract with the interpreter.
     y = jnp.round(acc.astype(jnp.float32) * jnp.float32(mult)) + zp_out
     return jnp.clip(y, lo, INT8_MAX).astype(jnp.int8)
+
+
+# add_params of the fused conv→add kernels, in cnn_ops.qadd argument order:
+# (mult_a, mult_b, zp_a, zp_b, zp_out) where leg *a* is the conv's int8
+# output and leg *b* the residual input.
+AddParams = Tuple[float, float, int, int, int]
+
+_QADD_SHIFT = 16    # must stay in lock-step with cnn_ops.QADD_SHIFT
+
+
+def _qadd_replay(y, r, addp: AddParams):
+    # Must stay literally the fixed-point sequence of cnn_ops.qadd: both
+    # multipliers quantized to _QADD_SHIFT fractional bits at trace time,
+    # int32 accumulate, integer round-half-even — integer ops cannot be
+    # FMA-contracted, so this is bit-identical in every execution context
+    # (no ReLU: the add has no fused activation in the q-graphs).
+    mult_a, mult_b, zp_a, zp_b, zp_out = addp
+    ma = int(round(float(mult_a) * (1 << _QADD_SHIFT)))
+    mb = int(round(float(mult_b) * (1 << _QADD_SHIFT)))
+    acc = ((y.astype(jnp.int32) - zp_a) * ma
+           + (r.astype(jnp.int32) - zp_b) * mb)
+    base = acc >> _QADD_SHIFT
+    rem = acc - (base << _QADD_SHIFT)
+    half = 1 << (_QADD_SHIFT - 1)
+    z = jnp.where(rem > half, base + 1,
+                  jnp.where(rem < half, base, base + (base & 1)))
+    return jnp.clip(z + zp_out, INT8_MIN, INT8_MAX).astype(jnp.int8)
 
 
 # ------------------------------------------------------------- 1x1 pointwise
@@ -107,6 +135,59 @@ def qconv1x1_pallas(x: jax.Array, w: jax.Array, *, mult: float, zp_in: int,
     return out[:M].reshape(H, W, Cout)
 
 
+def _qconv1x1_add_kernel(x_ref, w_ref, r_ref, o_ref, *, mult: float,
+                         zp_in: int, zp_out: int, lo: int, addp: AddParams):
+    xi = x_ref[...].astype(jnp.int32) - zp_in     # [bm, Cin]
+    wi = w_ref[...].astype(jnp.int32)             # [Cin, Cout]
+    acc = lax.dot_general(xi, wi, (((1,), (0,)), ((), ())),
+                          preferred_element_type=jnp.int32)
+    y = _requant(acc, mult, zp_out, lo)           # the conv's int8 output,
+    o_ref[...] = _qadd_replay(y, r_ref[...], addp)  # never leaves VMEM
+
+
+def qconv1x1_add_pallas(x: jax.Array, w: jax.Array, r: jax.Array, *,
+                        mult: float, zp_in: int, zp_out: int,
+                        add_params: AddParams, lo: Optional[int] = None,
+                        block_rows: int = 256,
+                        interpret: bool = False) -> jax.Array:
+    """Fused ``qconv2d(1x1) -> qadd`` in one pass: x [H,W,Cin] int8 against
+    w [Cin,Cout] plus residual r [H,W,Cout] int8 -> [H,W,Cout] int8.
+
+    The conv's requantized int8 tile feeds the add's requantize without a
+    memory round-trip — the PR 7 leftover the row-tile structure of
+    ``qconv1x1_pallas`` was built for.  Bit-identical to running the two
+    q-ops back to back (both requantize sequences are replayed literally).
+    """
+    _require_int8("x", x)
+    _require_int8("w", w)
+    _require_int8("r", r)
+    H, W, Cin = x.shape
+    Cout = w.shape[1]
+    lo = zp_out if lo is None else lo
+    M = H * W
+    bm = min(block_rows, M)
+    pad = (-M) % bm
+    xm = x.reshape(M, Cin)
+    rm = r.reshape(M, Cout)
+    if pad:     # zp_in rows: dead compute, sliced off below
+        xm = jnp.concatenate(
+            [xm, jnp.full((pad, Cin), zp_in, jnp.int8)], axis=0)
+        rm = jnp.concatenate(
+            [rm, jnp.zeros((pad, Cout), jnp.int8)], axis=0)
+    out = pl.pallas_call(
+        functools.partial(_qconv1x1_add_kernel, mult=mult, zp_in=zp_in,
+                          zp_out=zp_out, lo=lo, addp=tuple(add_params)),
+        grid=((M + pad) // bm,),
+        in_specs=[pl.BlockSpec((bm, Cin), lambda i: (i, 0)),
+                  pl.BlockSpec((Cin, Cout), lambda i: (0, 0)),
+                  pl.BlockSpec((bm, Cout), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, Cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M + pad, Cout), jnp.int8),
+        interpret=interpret,
+    )(xm, w, rm)
+    return out[:M].reshape(H, W, Cout)
+
+
 # ------------------------------------------------------- k×k conv / dwconv
 def _pad_for_blocks(x, k: int, stride: int, hpad: Tuple[int, int],
                     wpad: Tuple[int, int], zp_in: int, oh: int, ow: int,
@@ -142,6 +223,27 @@ def _qconv_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int, mult: float,
     o_ref[...] = _requant(acc, mult, zp_out, lo).reshape(bm, ow, cout)
 
 
+def _qconv_add_kernel(x_ref, w_ref, r_ref, o_ref, *, k: int, stride: int,
+                      mult: float, zp_in: int, zp_out: int, lo: int, bm: int,
+                      ow: int, addp: AddParams):
+    base = pl.program_id(0) * (bm * stride)
+    span = (bm - 1) * stride + k
+    xs = pl.load(x_ref, (pl.dslice(base, span), slice(None), slice(None)))
+    xi = xs.astype(jnp.int32) - zp_in             # [span, Wp, Cin]
+    wi = w_ref[...].astype(jnp.int32)             # [k, k, Cin, Cout]
+    cin, cout = wi.shape[2], wi.shape[3]
+    acc = jnp.zeros((bm * ow, cout), jnp.int32)
+    for dy in range(k):
+        for dx in range(k):
+            win = xi[dy:dy + (bm - 1) * stride + 1:stride,
+                     dx:dx + (ow - 1) * stride + 1:stride, :]
+            acc += lax.dot_general(win.reshape(bm * ow, cin), wi[dy, dx],
+                                   (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+    y = _requant(acc, mult, zp_out, lo).reshape(bm, ow, cout)
+    o_ref[...] = _qadd_replay(y, r_ref[...], addp)
+
+
 def _qdwconv_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int, mult: float,
                     zp_in: int, zp_out: int, lo: int, bm: int, ow: int):
     base = pl.program_id(0) * (bm * stride)
@@ -161,7 +263,9 @@ def _qdwconv_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int, mult: float,
 def _windowed_call(kernel_body, x, w, w_shape, cout: int, *, k: int,
                    stride: int, mult: float, zp_in: int, zp_out: int,
                    lo: int, hpad: Tuple[int, int], wpad: Tuple[int, int],
-                   block_rows: int, interpret: bool) -> jax.Array:
+                   block_rows: int, interpret: bool,
+                   residual: Optional[jax.Array] = None,
+                   addp: Optional[AddParams] = None) -> jax.Array:
     H, W, _ = x.shape
     oh = (H + hpad[0] + hpad[1] - k) // stride + 1
     ow = (W + wpad[0] + wpad[1] - k) // stride + 1
@@ -169,16 +273,26 @@ def _windowed_call(kernel_body, x, w, w_shape, cout: int, *, k: int,
     nblk = -(-oh // bm)
     xp = _pad_for_blocks(x, k, stride, hpad, wpad, zp_in, oh, ow, bm)
     Hp, Wp, Cl = xp.shape
+    operands = [xp, w]
+    in_specs = [pl.BlockSpec((Hp, Wp, Cl), lambda i: (0, 0, 0)),
+                pl.BlockSpec(w_shape, lambda i: (0,) * len(w_shape))]
+    extra = {}
+    if residual is not None:
+        # residual rows pad to the block grid (dead compute, sliced off)
+        operands.append(jnp.pad(residual,
+                                ((0, nblk * bm - oh), (0, 0), (0, 0))))
+        in_specs.append(pl.BlockSpec((bm, ow, cout), lambda i: (i, 0, 0)))
+        extra["addp"] = tuple(addp)
     out = pl.pallas_call(
         functools.partial(kernel_body, k=k, stride=stride, mult=mult,
-                          zp_in=zp_in, zp_out=zp_out, lo=lo, bm=bm, ow=ow),
+                          zp_in=zp_in, zp_out=zp_out, lo=lo, bm=bm, ow=ow,
+                          **extra),
         grid=(nblk,),
-        in_specs=[pl.BlockSpec((Hp, Wp, Cl), lambda i: (0, 0, 0)),
-                  pl.BlockSpec(w_shape, lambda i: (0,) * len(w_shape))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, ow, cout), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((nblk * bm, ow, cout), jnp.int8),
         interpret=interpret,
-    )(xp, w)
+    )(*operands)
     return out[:oh]
 
 
@@ -203,6 +317,33 @@ def qconv_pallas(x: jax.Array, w: jax.Array, *, stride: int, mult: float,
         mult=mult, zp_in=zp_in, zp_out=zp_out,
         lo=zp_out if lo is None else lo, hpad=hpad, wpad=tuple(wpad),
         block_rows=block_rows, interpret=interpret)
+
+
+def qconv_add_pallas(x: jax.Array, w: jax.Array, r: jax.Array, *,
+                     stride: int, mult: float, zp_in: int, zp_out: int,
+                     add_params: AddParams, lo: Optional[int] = None,
+                     hpad: Optional[Tuple[int, int]] = None,
+                     wpad: Tuple[int, int] = (0, 0),
+                     block_rows: int = 128,
+                     interpret: bool = False) -> jax.Array:
+    """Fused ``qconv2d -> qadd``: x [H,W,Cin] int8, w [k,k,Cin,Cout] int8,
+    residual r [OH,OW,Cout] int8 -> [OH,OW,Cout] int8.
+
+    General k×k/stride twin of ``qconv1x1_add_pallas``: the conv tile's
+    requantized int8 rows feed the add's requantize in the same grid step.
+    Bit-identical to the two q-ops run separately.
+    """
+    _require_int8("x", x)
+    _require_int8("w", w)
+    _require_int8("r", r)
+    k = w.shape[0]
+    hpad = (0, 0) if hpad is None else tuple(hpad)
+    return _windowed_call(
+        _qconv_add_kernel, x, w, tuple(w.shape), w.shape[3], k=k,
+        stride=stride, mult=mult, zp_in=zp_in, zp_out=zp_out,
+        lo=zp_out if lo is None else lo, hpad=hpad, wpad=tuple(wpad),
+        block_rows=block_rows, interpret=interpret, residual=r,
+        addp=add_params)
 
 
 def qdwconv_pallas(x: jax.Array, w: jax.Array, *, stride: int, mult: float,

@@ -155,7 +155,11 @@ def _lower_pex_slice(ctx: LoweringCtx, op: Operator, x):
     if rows is None:                    # pre-metadata graph: trace the closure
         return _fallback(ctx, op, x)
     lo, hi = rows
-    return lax.slice_in_dim(x, lo, hi, axis=0)
+    x = lax.slice_in_dim(x, lo, hi, axis=0)
+    cols = op.attrs.get("pex_cols")     # 2-D tile extract: columns too
+    if cols is not None:
+        x = lax.slice_in_dim(x, cols[0], cols[1], axis=1)
+    return x
 
 
 @register_lowering("pex_concat")
@@ -168,7 +172,9 @@ def _lower_pex_concat(ctx: LoweringCtx, op: Operator, *args):
         acc = jnp.zeros(ctx.shape(op.output), part.dtype)
     else:
         acc, part = args
-    idx = (start,) + (0,) * (np.ndim(part) - 1)
+    # 2-D tiles scatter at (row, column) — pex_cstart is 0 for row cascades
+    idx = (start, op.attrs.get("pex_cstart", 0)) + (0,) * (np.ndim(part) - 2)
+    idx = idx[:np.ndim(part)]
     return lax.dynamic_update_slice(acc, part, idx)
 
 
@@ -265,11 +271,14 @@ def _roll_key(ctx: LoweringCtx, op: Operator):
         if "pex_rows" not in a:
             return None
         lo, hi = a["pex_rows"]
-        return ("pex_slice", hi - lo, ins, outs)
+        # the column window is traced statically into the body, so it must
+        # match across rolled iterations (constant within a W-strip)
+        return ("pex_slice", hi - lo, a.get("pex_cols"), ins, outs)
     if op.kind == "pex_concat":
         if "pex_start" not in a:
             return None
-        return ("pex_concat", bool(a.get("pex_first")), ins, outs)
+        return ("pex_concat", bool(a.get("pex_first")),
+                a.get("pex_cstart"), ins, outs)
     if op.kind == "pex_ring_push":
         if "pex_ring_dst" not in a:
             return None
@@ -280,7 +289,9 @@ def _roll_key(ctx: LoweringCtx, op: Operator):
             return None
         return ("pex_ring_read", a["pex_ring_rows"], ins, outs)
     if "pex_of" in a and "pex_pads" in a:
-        return (op.kind, a["pex_of"], tuple(a["pex_pads"]), ins, outs)
+        wpads = a.get("pex_wpads")
+        return (op.kind, a["pex_of"], tuple(a["pex_pads"]),
+                None if wpads is None else tuple(wpads), ins, outs)
     return None
 
 
@@ -304,7 +315,9 @@ class _Template:
     in_slots: List[_Slot]
     out_slot: _Slot
     lo: Optional[Any] = None           # pex_slice: row start per iteration
+    col: int = 0                      # pex_slice: static column start (2-D)
     start: Optional[Any] = None       # pex_concat: write start per iteration
+    cstart: int = 0                   # pex_concat: static column start (2-D)
     ring_dst: Optional[Any] = None    # pex_ring_push: dst row per iteration
     ring_src: Optional[Any] = None    # pex_ring_read: src row per iteration
     ring_rows: int = 0                # ring size (rows); static per template
@@ -373,9 +386,11 @@ def _build_loop(ctx: LoweringCtx, offsets: Dict[str, Tuple[int, int]],
         if rep.kind == "pex_slice":
             tpl.lo = jnp.asarray([o.attrs["pex_rows"][0] for o in ops],
                                  jnp.int32)
+            tpl.col = rep.attrs.get("pex_cols", (0, 0))[0]
         elif rep.kind == "pex_concat":
             tpl.start = jnp.asarray([o.attrs["pex_start"] for o in ops],
                                     jnp.int32)
+            tpl.cstart = rep.attrs.get("pex_cstart", 0)
         elif rep.kind == "pex_ring_push":
             tpl.ring_dst = jnp.asarray([o.attrs["pex_ring_dst"]
                                         for o in ops], jnp.int32)
@@ -662,14 +677,16 @@ def compile_schedule(graph: Graph,
                 op = tpl.op
                 if tpl.lo is not None:            # pex_slice, dynamic rows
                     x = args[0]
-                    rows = tpl.out_slot.shape[0]
-                    idx = (tpl.lo[i],) + (0,) * (x.ndim - 1)
-                    out = lax.dynamic_slice(x, idx,
-                                            (rows,) + x.shape[1:])
+                    # sizes come from the out slot so 2-D tile extracts
+                    # (static column window, dynamic row start) roll too;
+                    # for row extracts out shape == (rows,) + x.shape[1:]
+                    idx = (tpl.lo[i], tpl.col) + (0,) * (x.ndim - 2)
+                    out = lax.dynamic_slice(x, idx[:x.ndim],
+                                            tpl.out_slot.shape)
                 elif tpl.start is not None:       # pex_concat, dynamic start
                     acc, part = args
-                    idx = (tpl.start[i],) + (0,) * (part.ndim - 1)
-                    out = lax.dynamic_update_slice(acc, part, idx)
+                    idx = (tpl.start[i], tpl.cstart) + (0,) * (part.ndim - 2)
+                    out = lax.dynamic_update_slice(acc, part, idx[:part.ndim])
                 elif tpl.ring_dst is not None:    # pex_ring_push, dyn. dst
                     if op.attrs.get("pex_first"):
                         (part,) = args

@@ -29,9 +29,12 @@ from __future__ import annotations
 import random
 from typing import Dict, FrozenSet, Iterator, List, Optional, Sequence, Tuple
 
+from repro.core.allocator import ArenaPlanner
 from repro.core.graph import Graph, Operator, inplace_candidates
-from repro.core.partition import (PEX_ATTR, Segment, SliceSpec,
-                                  apply_partition, estimate_segment,
+from repro.core.partition import (PEX_ATTR, Cascade, Segment, SliceSpec,
+                                  _strips_eligible, apply_cascade,
+                                  apply_partition, estimate_cascade,
+                                  estimate_segment, same_pads,
                                   sliceable_runs)
 from repro.core.solver import segment_extra_macs
 
@@ -284,6 +287,123 @@ def sliceable_chain_graph(heights: Sequence[int], row_bytes: Sequence[int],
         prev = "join"
     g.set_outputs([prev])
     return g
+
+
+# ------------------------------------------------- 2-D tiled-chain oracle
+def tiled_chain_graph(h: int, w: int, chan_bytes: Sequence[int],
+                      kernels: Sequence[int], strides: Sequence[int],
+                      kernels_w: Sequence[int], strides_w: Sequence[int]
+                      ) -> Graph:
+    """A scheduling-only 2-D chain: op i maps its ``(h_i, w_i)`` input to
+    the SAME-padded output of a per-axis ``(kernel, stride)`` /
+    ``(kernel_w, stride_w)`` window; tensor i holds ``chan_bytes[i]`` per
+    spatial element.  The shapes carry both axes so the W-strip planner
+    (``_strips_eligible`` / ``_backprop_cols``) sees a real width map."""
+    n = len(kernels)
+    assert (len(strides) == len(kernels_w) == len(strides_w) == n
+            and len(chan_bytes) == n + 1)
+    hs, ws = [h], [w]
+    for i in range(n):
+        hs.append(same_pads(hs[-1], kernels[i], strides[i])[0])
+        ws.append(same_pads(ws[-1], kernels_w[i], strides_w[i])[0])
+    g = Graph()
+    g.add_tensor("in", h * w * chan_bytes[0], shape=(h, w))
+    prev = "in"
+    for i in range(n):
+        out = f"t{i}"
+        g.add_tensor(out, hs[i + 1] * ws[i + 1] * chan_bytes[i + 1],
+                     shape=(hs[i + 1], ws[i + 1]))
+        op = g.add_operator(f"op{i}", [prev], out)
+        op.attrs[PEX_ATTR] = SliceSpec(
+            kernel=kernels[i], stride=strides[i], sliced_inputs=(0,),
+            macs_per_row=ws[i + 1] * chan_bytes[i + 1],
+            kernel_w=kernels_w[i], stride_w=strides_w[i])
+        prev = out
+    g.set_outputs([prev])
+    return g
+
+
+def random_tiled_chain(seed: int, max_len: int = 4
+                       ) -> Tuple[Graph, Tuple[int, ...]]:
+    """Fixed-seed random tiled chain plus a valid cut set for it.  Strides
+    are clamped to 1 whenever another halving would push that axis below 3
+    rows/cols — every drawn graph stays cascade-eligible (final height and
+    width >= 2) without rejection sampling."""
+    rng = random.Random(seed)
+    n = rng.randint(2, max_len)
+    h = rng.choice([8, 9, 12])
+    w = rng.choice([8, 10, 12])
+    chan = [rng.choice([1, 2, 4, 8]) for _ in range(n + 1)]
+    kernels, strides, kernels_w, strides_w = [], [], [], []
+    hh, ww = h, w
+    for _ in range(n):
+        k = rng.choice([1, 2, 3])
+        s = rng.choice([1, 1, 2])
+        if same_pads(hh, k, s)[0] < 3:
+            s = 1
+        kw = rng.choice([1, 2, 3])
+        sw = rng.choice([1, 1, 2])
+        if same_pads(ww, kw, sw)[0] < 3:
+            sw = 1
+        kernels.append(k)
+        strides.append(s)
+        kernels_w.append(kw)
+        strides_w.append(sw)
+        hh = same_pads(hh, k, s)[0]
+        ww = same_pads(ww, kw, sw)[0]
+    g = tiled_chain_graph(h, w, chan, kernels, strides, kernels_w, strides_w)
+    cuts = (rng.randint(1, n - 1),)
+    return g, cuts
+
+
+def forced_cascade(graph: Graph, cuts: Sequence[int], k: int,
+                   min_rows: int = 1, rate_div: int = 1, strips: int = 1
+                   ) -> Tuple[Graph, Cascade]:
+    """Emit the exact ``(cuts, k, strips)`` cascade of the graph's single
+    sliceable run — no planner in the loop, so oracle enumerations control
+    every knob the cost model prices."""
+    run = sliceable_runs(graph)[0]
+    segs: List[List[Operator]] = []
+    lo = 0
+    for c in list(cuts) + [len(run)]:
+        segs.append(list(run[lo:c]))
+        lo = c
+    est, frac, rings, extra = estimate_cascade(graph, segs, k, min_rows,
+                                               rate_div, strips)
+    casc = Cascade(segs, k, rings, est, frac, min_rows, rate_div, extra,
+                   strips)
+    return apply_cascade(graph, [casc]), casc
+
+
+def tiled_triple_points(graph: Graph, cuts: Sequence[int],
+                        k_choices: Sequence[int] = (2, 3, 4),
+                        strips_choices: Sequence[int] = (1, 2, 3),
+                        min_rows: int = 1, rate_div: int = 1
+                        ) -> List[Tuple[str, int, int, int]]:
+    """(label, planner est, liveness peak, arena bytes) for every feasible
+    ``(k, strips)`` forced cascade of a pure chain.  Liveness is
+    ``Graph.peak_usage`` of the emitted streaming order (the ground-truth
+    memory model), arena is a validated ``ArenaPlanner`` packing — three
+    independent computations the triple-agreement property pins equal."""
+    run = sliceable_runs(graph)[0]
+    members = list(run)
+    h_final = int(graph.tensors[members[-1].output].shape[0])
+    points: List[Tuple[str, int, int, int]] = []
+    for k in k_choices:
+        if not 2 <= k <= h_final:
+            continue
+        for strips in strips_choices:
+            if not _strips_eligible(graph, members, strips):
+                continue
+            rg, casc = forced_cascade(graph, cuts, k, min_rows, rate_div,
+                                      strips)
+            sched = list(rg.operators)
+            live = rg.peak_usage(sched)
+            plan = ArenaPlanner.plan(rg, sched)
+            ArenaPlanner.validate(plan, rg)
+            points.append((f"tile[k{k}/s{strips}]", casc.est_peak, live,
+                           plan.arena_size))
+    return points
 
 
 def random_sliceable_chain(seed: int, max_len: int = 3) -> Graph:

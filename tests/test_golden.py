@@ -56,6 +56,21 @@ def test_mobilenet_100_192_headline():
     assert plan.arena_size <= 512 * KB       # the capacity demo itself
 
 
+def test_mobilenet_100_192_cascade2d_221696_headline():
+    """The 2-D tiled-cascade headline, pinned to the byte: MobileNet-1.0
+    @192 int8 under a 224 KB budget schedules as a W-strip cascade
+    (``+cascade2d``) at EXACTLY 221696 B (216.5 KB) — below the 243 KB
+    (248832 B) row-ring floor the 1-D cascade golden pins — and the arena
+    packing achieves the liveness peak with zero slack."""
+    q = int8_scheduling_graph(mobilenet_v1_graph(alpha=1.0, resolution=192))
+    res = schedule(q, arena_budget=224 * KB)
+    assert "cascade2d" in res.method
+    plan = _plan(res, q)
+    assert res.peak == 221696
+    assert plan.arena_size == 221696
+    assert res.extra_macs_frac <= 0.25
+
+
 def test_mobilenet_050_192_fits_256K():
     """The 256 KB stretch target: int8 + reorder + partial execution on
     MobileNet-0.5@192 (f32 reorder-only is 1728 KB, int8 reorder-only

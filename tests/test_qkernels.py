@@ -12,12 +12,14 @@ import pytest
 
 import jax.numpy as jnp
 
+import jax
+
 from repro.core import ArenaPlanner, schedule
 from repro.core.graph import Graph
 from repro.core.partition import cascade_graph
 from repro.graphs import quantize_graph, random_input
-from repro.graphs.cnn_ops import CNNBuilder, qconv2d, qdwconv2d
-from repro.kernels import qconv_fused, qdwconv_fused
+from repro.graphs.cnn_ops import CNNBuilder, qadd, qconv2d, qdwconv2d
+from repro.kernels import qconv_add_fused, qconv_fused, qdwconv_fused
 from repro.mcu import MicroInterpreter, compile_schedule
 
 
@@ -83,6 +85,61 @@ def test_qdwconv_fused_bit_identical(H, W, C, k, stride, hpad, block_rows):
                      hpad=hpad)
     assert got.dtype == jnp.int8
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# Residual-leg quantization params for the fused conv->add chain, in the
+# ``qadd`` argument order (mult_a, mult_b, zp_a, zp_b, zp_out); leg *a* is
+# the conv's output, so its zero-point is the conv's ``zp_out``.
+_ADDP = (0.71, 0.39, _QP["zp_out"], 2, -7)
+
+_CONV_ADD_GRID = [
+    # H, W, Cin, Cout, k, stride, hpad, block_rows
+    (12, 12, 8, 16, 1, 1, None, 40),          # 1x1 fast path, ragged blocks
+    (11, 9, 4, 6, 3, 2, None, 2),             # odd shape, stride 2
+    pytest.param(10, 8, 3, 7, 3, 1, (0, 2), 4,       # Pex mid-slice pads
+                 marks=pytest.mark.slow),
+    pytest.param(9, 7, 5, 1, 3, 2, (2, 0), 4,        # 1-lane Cout, top halo
+                 marks=pytest.mark.slow),
+]
+
+
+@pytest.mark.parametrize("H,W,Cin,Cout,k,stride,hpad,block_rows",
+                         _CONV_ADD_GRID)
+def test_qconv_add_fused_bit_identical(H, W, Cin, Cout, k, stride, hpad,
+                                       block_rows):
+    """Fused conv->add (residual requant folded into the conv kernel's
+    epilogue) vs the two-op reference chain ``qconv2d -> qadd``: the
+    intermediate conv output never leaves VMEM, yet every element must
+    match bit-for-bit."""
+    rng = np.random.default_rng(7)
+    x = qrand(rng, (H, W, Cin))
+    w = qrand(rng, (k, k, Cin, Cout))
+    want_conv = qconv2d(x, w, stride, _QP["mult"], _QP["zp_in"],
+                        _QP["zp_out"], hpad=hpad)
+    r = qrand(rng, want_conv.shape)
+    want = qadd(want_conv, r, *_ADDP)
+    got = qconv_add_fused(x, w, r, stride=stride, hpad=hpad,
+                          add_params=_ADDP, block_rows=block_rows,
+                          interpret=True, **_QP)
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qadd_fixed_point_jit_invariant():
+    """``qadd`` must produce the same bits eager and jitted.  The
+    fixed-point formulation exists precisely for this: with f32
+    multipliers XLA's CPU codegen contracts the mul->add into a
+    single-rounded FMA under jit (and ``optimization_barrier`` does not
+    survive codegen), silently changing results vs eager — integer
+    arithmetic cannot contract."""
+    rng = np.random.default_rng(23)
+    a = qrand(rng, (9, 11, 6))
+    b = qrand(rng, (9, 11, 6))
+    args = (0.37, 0.61, 3, -2, 5)
+    eager = qadd(a, b, *args)
+    jitted = jax.jit(qadd, static_argnums=(2, 3, 4, 5, 6))(a, b, *args)
+    assert eager.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))
 
 
 def test_qconv_fused_saturates_both_rails():
