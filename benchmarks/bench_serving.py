@@ -80,13 +80,17 @@ def _bench_case(case: str, graph, qmodel, *, replicas: int, lanes: int,
             {"name": name, "us": us, "derived": derived,
              "meta": {**meta, **extra}}))
 
+    # expired/shed ride on the *_rps rows and are gated exactly zero by
+    # compare.py: this is the no-fault configuration, so any nonzero count
+    # is an admission-layer bug, not load (DESIGN.md §12)
     row(f"serving.{case}.single_rps", s.us_per_request,
         round(s.requests_per_s, 1), requests_per_s=round(s.requests_per_s, 2),
-        p50_ms=round(s.p50_ms, 2), p99_ms=round(s.p99_ms, 2))
+        p50_ms=round(s.p50_ms, 2), p99_ms=round(s.p99_ms, 2),
+        expired=s.expired, shed=s.shed)
     row(f"serving.{case}.sharded_rps", h.us_per_request,
         round(h.requests_per_s, 1), requests_per_s=round(h.requests_per_s, 2),
         p50_ms=round(h.p50_ms, 2), p99_ms=round(h.p99_ms, 2),
-        replicas=h.replicas)
+        replicas=h.replicas, expired=h.expired, shed=h.shed)
     speedup = h.requests_per_s / s.requests_per_s if s.requests_per_s else 0.0
     row(f"serving.{case}.speedup_x", h.us_per_request, round(speedup, 2))
     return speedup

@@ -19,6 +19,10 @@ Three gates, per row name present in both files:
   throughput on shared runners is noisier than single-dispatch us/call).
   Like the bytes gate, a fresh row that *loses* its throughput figure
   fails rather than silently leaving the gate.
+* **chaos counters (exact, strict)** — serving rows carrying ``expired``/
+  ``shed`` counts must report exactly zero: CI benchmarks run the no-fault
+  configuration, so any expired or shed request is an admission-layer bug,
+  not load.  Losing the counters fails like losing a byte figure.
 * **Pareto (exact, strict)** — rows carrying a ``pareto`` front (a sorted
   list of ``[extra_macs, peak_bytes]`` pairs from the joint solver) must
   *cover* the baseline front: every baseline point must be matched or
@@ -49,9 +53,32 @@ from typing import Dict, List, Tuple
 
 
 def load_rows(path: str) -> Tuple[Dict[str, dict], dict]:
-    with open(path) as f:
-        payload = json.load(f)
-    return {r["name"]: r for r in payload["rows"]}, payload
+    """Load one trajectory file, failing with a one-line diagnosis (file +
+    offending key) instead of a raw traceback on corrupt/truncated input —
+    a CI gate whose own crash hides which artefact was bad is unactionable."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except OSError as e:
+        raise SystemExit(f"benchmark compare: {path}: cannot read file "
+                         f"({e.strerror or e})")
+    except json.JSONDecodeError as e:
+        raise SystemExit(f"benchmark compare: {path}: corrupt/truncated "
+                         f"JSON ({e.msg} at line {e.lineno} col {e.colno})")
+    if not isinstance(payload, dict) or "rows" not in payload:
+        raise SystemExit(f"benchmark compare: {path}: missing key 'rows' "
+                         f"(not a run.py --json trajectory?)")
+    rows = payload["rows"]
+    if not isinstance(rows, list):
+        raise SystemExit(f"benchmark compare: {path}: key 'rows' is "
+                         f"{type(rows).__name__}, expected a list of rows")
+    out: Dict[str, dict] = {}
+    for i, r in enumerate(rows):
+        if not isinstance(r, dict) or "name" not in r:
+            raise SystemExit(f"benchmark compare: {path}: rows[{i}] missing "
+                             f"key 'name' (got: {r!r:.80})")
+        out[r["name"]] = r
+    return out, payload
 
 
 def front_covers(base_front, fresh_front) -> List[Tuple[int, int]]:
@@ -122,6 +149,22 @@ def compare_rows(
                 failures.append(
                     f"{name}: requests/s fell {brps:.1f} -> {frps:.1f} "
                     f"(floor {floor:.1f} = baseline -{rps_tol:.0%})"
+                )
+        # chaos gate: serving rows carry expired/shed counts measured in
+        # the no-fault configuration — they must be exactly zero (a request
+        # expired or shed during a clean benchmark is an admission bug),
+        # and like the other gates they may not silently disappear
+        for key in ("expired", "shed"):
+            bk, fk = b.get(key), f.get(key)
+            if bk is not None and fk is None:
+                failures.append(
+                    f"{name}: {key} count lost (baseline has {bk} — the "
+                    f"no-fault chaos gate would be silently disarmed)"
+                )
+            if fk is not None and fk != 0:
+                failures.append(
+                    f"{name}: {key}={fk} in the no-fault configuration "
+                    f"(must be exactly 0)"
                 )
         if b.get("dtypes") and f.get("dtypes") and b["dtypes"] != f["dtypes"]:
             notes.append(f"{name}: dtypes changed {b['dtypes']} -> {f['dtypes']}")

@@ -207,8 +207,10 @@ def main(argv=None) -> None:
         # compare.py floor gate; the latency percentiles ride along.
         # tile_rows/tile_cols tag 2-D tiled-cascade rows with the steady
         # working-tile shape (rows per chunk x columns per W-strip)
+        # expired/shed are the chaos-gate counters: compare.py requires
+        # them to be exactly zero on no-fault serving rows
         for k in ("requests_per_s", "p50_ms", "p99_ms", "replicas",
-                  "tile_rows", "tile_cols"):
+                  "tile_rows", "tile_cols", "expired", "shed"):
             if meta.get(k) is not None:
                 jr[k] = meta[k]
         json_rows.append(jr)

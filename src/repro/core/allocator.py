@@ -159,12 +159,47 @@ class Placement:
 class ArenaPlan:
     placements: List[Placement]
     arena_size: int
+    guard_bytes: int = 0   # planned inter-placement guard width (0 = none)
 
     def offset_of(self, tensor: str) -> int:
         for p in self.placements:
             if p.tensor == tensor:
                 return p.offset
         raise KeyError(tensor)
+
+    def guard_regions(self) -> List[Tuple[int, int]]:
+        """``(offset, size)`` byte ranges of the arena that **no** placement
+        ever covers.  The compiled executor fills these with canary bytes
+        and verifies them untouched after execution (guard-byte debug mode,
+        DESIGN.md §12).
+
+        Defined as the complement of the union of all placements — not "the
+        ``guard_bytes`` after each placement" — because temporal reuse lets
+        a time-disjoint tensor legitimately occupy another tensor's trailing
+        pad.  The complement is provably never written by a correct program,
+        so a stomped canary is always a genuine out-of-bounds write, never a
+        false positive.  Empty when ``guard_bytes == 0`` (placements tile
+        the arena up to alignment slack, which we deliberately do not treat
+        as guarded in production plans — they must stay byte-identical)."""
+        if self.guard_bytes <= 0:
+            return []
+        spans = sorted((p.offset, p.offset + p.size)
+                       for p in self.placements if p.size > 0)
+        merged: List[List[int]] = []
+        for lo, hi in spans:
+            if merged and lo <= merged[-1][1]:
+                merged[-1][1] = max(merged[-1][1], hi)
+            else:
+                merged.append([lo, hi])
+        out: List[Tuple[int, int]] = []
+        cursor = 0
+        for lo, hi in merged:
+            if lo > cursor:
+                out.append((cursor, lo - cursor))
+            cursor = hi
+        if cursor < self.arena_size:
+            out.append((cursor, self.arena_size - cursor))
+        return out
 
 
 def tensor_lifetimes(graph: Graph, schedule: Sequence[Operator],
@@ -253,7 +288,17 @@ class ArenaPlanner:
     @staticmethod
     def plan(graph: Graph, schedule: Sequence[Operator],
              include_constants: bool = True,
-             alignment: Optional[int] = None) -> ArenaPlan:
+             alignment: Optional[int] = None,
+             guard_bytes: int = 0) -> ArenaPlan:
+        """``guard_bytes > 0`` is the guarded-arena debug mode: every
+        tensor's *footprint* is inflated by ``guard_bytes`` during greedy
+        placement (and the arena gets a trailing band), so unplaced gaps —
+        ``ArenaPlan.guard_regions()`` — exist next to every placement for
+        the executor to fill with canaries.  Placements keep their true
+        sizes; ``guard_bytes=0`` (production) is byte-identical to the
+        historical planner."""
+        if guard_bytes < 0:
+            raise ValueError(f"guard_bytes must be >= 0, got {guard_bytes}")
         if alignment is None:
             alignment = graph.max_itemsize()
         lifetimes = tensor_lifetimes(graph, schedule, include_constants)
@@ -281,17 +326,22 @@ class ArenaPlanner:
                                if not (p.end < s or e < p.start)
                                and p.size > 0]
                 overlapping.sort(key=lambda p: p.offset)
+                # guard mode: fit against inflated footprints so every
+                # placement keeps >= guard_bytes of never-placed slack
+                # around it among its temporal neighbours
+                foot = size + guard_bytes
                 best_off, best_gap = None, None
                 cursor = 0
                 for p in overlapping:
                     gap = p.offset - cursor
-                    if gap >= size and (best_gap is None or gap < best_gap):
+                    if gap >= foot and (best_gap is None or gap < best_gap):
                         best_off, best_gap = cursor, gap
-                    cursor = max(cursor, align(p.offset + p.size))
+                    cursor = max(cursor,
+                                 align(p.offset + p.size + guard_bytes))
                 offset = best_off if best_off is not None else cursor
                 placed.append(Placement(rep, offset, size, s, e))
             arena = max((p.offset + p.size for p in placed), default=0)
-            return arena, placed
+            return arena + guard_bytes if arena else arena, placed
 
         orders = (
             lambda it: (-graph.size(it[0]), it[1]),          # by size
@@ -312,7 +362,7 @@ class ArenaPlanner:
                 expanded.append(Placement(name, offsets[rep],
                                           graph.size(name), ms, me,
                                           alias=shared))
-        return ArenaPlan(expanded, best_arena)
+        return ArenaPlan(expanded, best_arena, guard_bytes=guard_bytes)
 
     @staticmethod
     def validate(plan: ArenaPlan, graph: Optional[Graph] = None) -> None:

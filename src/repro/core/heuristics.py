@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 from .graph import Graph, Operator, linear_chains
 from .scheduler import ScheduleResult, minimise_peak_memory
@@ -333,13 +333,24 @@ def _schedule_plain(graph: Graph, exact_limit: int, contract_limit: int,
     return best
 
 
+# Every escalation rung ``schedule()`` may climb, in order.  ``rungs``
+# restricts the ladder to a subset — the graceful-degradation path in
+# ``deploy.build(strict=False)`` walks progressively smaller subsets when a
+# higher rung fails, so a cascade-rewrite bug degrades a deployment instead
+# of sinking it (DESIGN.md §12).  "reorder" (the plain reordering base the
+# paper starts from) is mandatory: with nothing else it is the identity
+# fallback that can only fail if the graph itself is unschedulable.
+_ALL_RUNGS = ("reorder", "pex", "cascade", "cascade2d", "solver")
+
+
 def schedule(graph: Graph, exact_limit: int = 18, contract_limit: int = 40,
              beam_width: int = 64, arena_budget: Optional[int] = None,
              partition: bool = False,
              partition_opts: Optional[dict] = None,
              solver_nodes: int = 20_000, solver_op_limit: int = 24,
              objective: str = "memory",
-             macs_cap: Optional[float] = None) -> ScheduleResult:
+             macs_cap: Optional[float] = None,
+             rungs: Optional[Sequence[str]] = None) -> ScheduleResult:
     """Best-effort minimal-peak schedule:
 
     1. greedy (always) — provides a branch-and-bound upper bound;
@@ -380,10 +391,29 @@ def schedule(graph: Graph, exact_limit: int = 18, contract_limit: int = 40,
     ``macs_cap`` (max extra-MACs fraction) — while ``objective="latency"``
     (requires ``arena_budget``) returns the *cheapest* schedule that fits
     the budget: among in-budget Pareto points, minimal halo-recompute MACs.
+
+    **Rung restriction.**  ``rungs`` limits the ladder to a subset of
+    ``("reorder", "pex", "cascade", "cascade2d", "solver")`` — the
+    graceful-degradation path (``deploy.build(strict=False)``) retries with
+    shrinking subsets when a rung's rewrite fails.  ``"reorder"`` is
+    mandatory (it is the base every other rung escalates from); ``None``
+    (default) enables every rung, which is the historical behaviour.
     """
+    if rungs is None:
+        active = frozenset(_ALL_RUNGS)
+    else:
+        active = frozenset(rungs)
+        unknown = active - frozenset(_ALL_RUNGS)
+        if unknown:
+            raise ValueError(f"unknown scheduler rungs {sorted(unknown)}; "
+                             f"choose from {_ALL_RUNGS}")
+        if "reorder" not in active:
+            raise ValueError("the 'reorder' rung is the mandatory base of "
+                             "the ladder and cannot be disabled")
     best = _ladder(graph, exact_limit, contract_limit, beam_width,
-                   arena_budget, partition, partition_opts)
-    if solver_nodes and 0 < len(graph.operators) <= solver_op_limit:
+                   arena_budget, partition, partition_opts, active)
+    if ("solver" in active and solver_nodes
+            and 0 < len(graph.operators) <= solver_op_limit):
         from .solver import solve   # deferred: avoids import cycle
         mode = ("latency" if objective == "latency"
                 and arena_budget is not None else "memory")
@@ -404,29 +434,34 @@ def schedule(graph: Graph, exact_limit: int = 18, contract_limit: int = 40,
 def _ladder(graph: Graph, exact_limit: int, contract_limit: int,
             beam_width: int, arena_budget: Optional[int],
             partition: bool,
-            partition_opts: Optional[dict]) -> ScheduleResult:
+            partition_opts: Optional[dict],
+            active: FrozenSet[str] = frozenset(_ALL_RUNGS)
+            ) -> ScheduleResult:
     """The fixed escalation ladder: reorder → pex → cascade → pex-over-tail
     → 2-D tiled cascade (greedy search inside each rung); the joint solver
-    refines on top."""
+    refines on top.  ``active`` gates which rungs may fire (degradation
+    path; "reorder" is always implied)."""
     best = _schedule_plain(graph, exact_limit, contract_limit, beam_width)
     want = partition or (arena_budget is not None
                          and best.peak > arena_budget)
-    if not want:
+    if not want or not (active & {"pex", "cascade", "cascade2d"}):
         return best
     from .partition import (cascade_graph,    # deferred: partition is
                             partition_graph)  # optional
-    pr = partition_graph(graph, budget=arena_budget,
-                         **(partition_opts or {}))
-    if pr.segments:
-        pg = pr.graph
-        pbest = min(_cheap_candidates(pg), key=lambda r: r.peak)
-        if pbest.peak < best.peak:
-            best = dataclasses.replace(pbest, graph=pg,
-                                       method=pbest.method + "+pex",
-                                       extra_macs=pr.extra_macs,
-                                       total_macs=pr.total_macs,
-                                       extra_macs_frac=pr.extra_macs_frac)
-    if arena_budget is None or best.peak <= arena_budget:
+    if "pex" in active:
+        pr = partition_graph(graph, budget=arena_budget,
+                             **(partition_opts or {}))
+        if pr.segments:
+            pg = pr.graph
+            pbest = min(_cheap_candidates(pg), key=lambda r: r.peak)
+            if pbest.peak < best.peak:
+                best = dataclasses.replace(pbest, graph=pg,
+                                           method=pbest.method + "+pex",
+                                           extra_macs=pr.extra_macs,
+                                           total_macs=pr.total_macs,
+                                           extra_macs_frac=pr.extra_macs_frac)
+    if (arena_budget is None or best.peak <= arena_budget
+            or not (active & {"cascade", "cascade2d"})):
         return best
     # the cascade planner honours the caller's shared partition knobs —
     # in particular a tightened overhead_cap (the halo-recompute latency
@@ -443,7 +478,7 @@ def _ladder(graph: Graph, exact_limit: int, contract_limit: int,
         extra = cr.extra_macs
         cbest = min(_cheap_candidates(cg), key=lambda r: r.peak)
         method = cbest.method + tag
-        if cbest.peak > arena_budget:
+        if cbest.peak > arena_budget and "pex" in active:
             # the cascade's conventional tail may itself be over budget —
             # whole-externals partial execution composes over the cascaded
             # graph
@@ -467,12 +502,13 @@ def _ladder(graph: Graph, exact_limit: int, contract_limit: int,
                                    total_macs=cr.total_macs,
                                    extra_macs_frac=frac)
 
-    cand = cascade_rung((1,), "+cascade")
-    if cand is None:
-        return best
-    if cand.peak < best.peak:
-        best = cand
-    if best.peak > arena_budget:
+    if "cascade" in active:
+        cand = cascade_rung((1,), "+cascade")
+        if cand is None:
+            return best
+        if cand.peak < best.peak:
+            best = cand
+    if best.peak > arena_budget and "cascade2d" in active:
         # 2-D tiled rung: row rings alone miss the budget, so re-plan with
         # W-strips in the search space (MCUNetV2-style patch streaming).
         # Gated on still-over-budget so in-budget row-cascade goldens are

@@ -89,6 +89,13 @@ _JNP_DTYPES = {
     "int32": jnp.int32, "float32": jnp.float32,
 }
 
+# Guard-byte debug mode (DESIGN.md §12): never-placed arena gaps (see
+# ``ArenaPlan.guard_regions``) are filled with this canary at arena build
+# and verified untouched after execution.  0xA5 = 1010_0101 — asymmetric
+# under bit rotation and distinct from 0x00/0xFF, so zero-fills, one-fills
+# and shifted writes all trip it.
+CANARY_BYTE = 0xA5
+
 
 def _view_bytes(raw, dtype: str, shape: Tuple[int, ...]):
     """uint8 [nbytes] -> ``dtype`` array of ``shape``."""
@@ -481,6 +488,10 @@ class CompiledExecutor:
     steps: int
     offsets: Dict[str, Tuple[int, int]]    # tensor -> (byte offset, bytes)
     zero_copy_reads: int = 0    # ring windows fused into their consumers
+    # guard-byte debug mode: (offset, size) arena ranges no placement ever
+    # covers; () in production (guard_bytes=0 plans) — the arena is then
+    # byte-identical to the un-guarded executor
+    guard_regions: Tuple[Tuple[int, int], ...] = ()
     # jit/pmap wrappers are built lazily and cached per geometry: engines
     # ask for the same batched program every dispatch, and an XLA compile
     # per call would dwarf the work
@@ -540,6 +551,9 @@ class CompiledExecutor:
         if missing:
             raise ValueError(f"missing graph inputs: {sorted(missing)}")
         arena = jnp.zeros((self.arena_size,), self.dtype)
+        for off, size in self.guard_regions:   # () in production plans
+            arena = lax.dynamic_update_slice(
+                arena, jnp.full((size,), CANARY_BYTE, self.dtype), (off,))
         for name, value in inputs.items():
             if name not in g.tensors:
                 raise ValueError(f"unknown tensor {name!r}")
@@ -573,9 +587,31 @@ class CompiledExecutor:
             out[o] = np.asarray(val) if as_numpy else val
         return out
 
+    def verify_guards(self, arena) -> None:
+        """Guard-byte debug mode: assert every canary region still holds
+        ``CANARY_BYTE`` after execution; a stomped byte is a genuine
+        out-of-bounds write by a lowering or a planner bug and raises
+        ``GuardViolation`` naming the first bad offset.  No-op (and free)
+        when the plan carries no guard regions."""
+        if not self.guard_regions:
+            return
+        from repro.errors import GuardViolation
+        a = np.asarray(arena)
+        for off, size in self.guard_regions:
+            region = a[off:off + size]
+            bad = np.nonzero(region != CANARY_BYTE)[0]
+            if bad.size:
+                at = off + int(bad[0])
+                raise GuardViolation(
+                    f"guard canary stomped at arena byte {at} (region "
+                    f"[{off},{off + size}), found 0x{int(a[at]):02x}, "
+                    f"expected 0x{CANARY_BYTE:02x}) — out-of-bounds write "
+                    f"by a lowering or an arena-plan bug")
+
     def run(self, inputs: Dict[str, Any], as_numpy: bool = True
             ) -> Dict[str, Any]:
         arena = self.fn(self.make_arena(inputs))
+        self.verify_guards(arena)
         return self.outputs_from(arena, as_numpy)
 
 
@@ -741,4 +777,6 @@ def compile_schedule(graph: Graph,
         raw_fn=raw_fn, fn=fn,
         rolled_loops=len(loops),
         rolled_ops=sum(lp.n * len(lp.templates) for lp in loops),
-        steps=len(sched), offsets=offsets, zero_copy_reads=len(zc))
+        steps=len(sched), offsets=offsets, zero_copy_reads=len(zc),
+        guard_regions=tuple(plan.guard_regions())
+        if getattr(plan, "guard_bytes", 0) else ())

@@ -48,6 +48,13 @@ _EXPORTS = {
     "ShardedServingEngine": ".sharded",
     "EngineStats": ".stats",
     "percentile_ms": ".stats",
+    # failure layer (DESIGN.md §12)
+    "AdmissionQueue": ".admission",
+    "QueuedRequest": ".admission",
+    "RequestError": ".admission",
+    "FaultPlan": ".faults",
+    "FaultInjector": ".faults",
+    "dispatch_with_retry": ".faults",
 }
 
 __all__ = ["force_host_devices"] + sorted(_EXPORTS)

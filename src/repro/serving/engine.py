@@ -81,7 +81,9 @@ class GraphServingEngine:
     def __init__(self, graph: Optional[Graph] = None, *,
                  deployment=None, arena_budget: Optional[int] = None,
                  partition: bool = False, micro_batch: int = 8,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, faults=None,
+                 max_retries: int = 2,
+                 dispatch_timeout: Optional[float] = None):
         if deployment is None:
             if graph is None:
                 raise ValueError("need a graph or a deployment")
@@ -89,6 +91,14 @@ class GraphServingEngine:
             deployment = build(graph, arena_budget=arena_budget,
                                partition=partition, use_pallas=use_pallas)
         self.deployment = deployment
+        # failure layer (DESIGN.md §12): seeded fault injection + bounded
+        # retry/watchdog around each micro-batch dispatch.  All off by
+        # default — the no-fault path adds zero work per dispatch.
+        from repro.serving.faults import FaultInjector, FaultPlan
+        self.faults = (FaultInjector(faults)
+                       if isinstance(faults, FaultPlan) else faults)
+        self.max_retries = int(max_retries)
+        self.dispatch_timeout = dispatch_timeout
         # aliases kept from the pre-facade engine API
         self.result = deployment.schedule_result
         self.exec_graph = deployment.exec_graph
@@ -106,11 +116,14 @@ class GraphServingEngine:
               ) -> List[Dict[str, Any]]:
         """Run every request's input dict through the compiled graph;
         returns one output dict per request, in order."""
+        from repro.serving.faults import dispatch_with_retry
         ex = self.executor
         results: List[Dict[str, Any]] = []
         latencies: List[float] = []
         padded = 0
         n_batches = 0
+        retried = 0
+        trips = 0
         t_start = time.perf_counter()
         for i in range(0, len(requests), self.micro_batch):
             chunk = requests[i:i + self.micro_batch]
@@ -126,8 +139,18 @@ class GraphServingEngine:
                 pad = ex.pad_arena()
                 stack.extend([pad] * n_pad)
                 padded += n_pad
-            arenas = self._batched(jnp.stack(stack))
+            # the jitted batch fn donates its input, so each retry attempt
+            # must re-stack from the (undonated) per-lane arenas
+            arenas, r, w = dispatch_with_retry(
+                lambda s=stack: self._batched(jnp.stack(s)),
+                faults=self.faults, max_retries=self.max_retries,
+                dispatch_timeout=self.dispatch_timeout)
+            retried += r
+            trips += w
             n_batches += 1
+            if ex.guard_regions:          # guard-byte debug mode only
+                for b in range(len(chunk)):
+                    ex.verify_guards(arenas[b])
             for b in range(len(chunk)):       # pad lanes b >= len(chunk)
                 results.append(ex.outputs_from(arenas[b]))   # skipped here
             t_done = time.perf_counter()
@@ -138,6 +161,9 @@ class GraphServingEngine:
         self.stats.record_serve(requests=len(requests), padded_lanes=padded,
                                 dispatches=n_batches, wall_s=wall,
                                 latencies_s=latencies)
+        self.stats.admitted = len(requests)
+        self.stats.retried = retried
+        self.stats.watchdog_trips = trips
         return results
 
 

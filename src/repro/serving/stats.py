@@ -67,6 +67,18 @@ class EngineStats:
     p50_ms: float = 0.0                  # per-request latency percentiles
     p99_ms: float = 0.0                  # (admission -> completion)
 
+    # ---- robustness (failure layer, DESIGN.md §12).  These are NOT in
+    # the as_json falsy-drop list on purpose: a zero here is a *measured*
+    # zero — the CI bench gate requires expired/shed to be present and
+    # zero on no-fault serving rows, so "0" and "absent" must differ.
+    admitted: int = 0                    # requests admitted to dispatch
+    expired: int = 0                     # deadline-expired, never executed
+    shed: int = 0                        # refused at max_pending bound
+    retried: int = 0                     # dispatch/lane retries consumed
+    failed: int = 0                      # typed RequestError results
+    watchdog_trips: int = 0              # post-hoc watchdog overruns
+    degraded: Optional[List[str]] = None  # degradation notes, None = none
+
     # ---- LLM engine (KV-block arena accounting); None on graph engines
     kv_arena_peak_bytes: Optional[int] = None
     kv_static_bytes: Optional[int] = None

@@ -129,6 +129,103 @@ def test_dtype_change_is_noted():
     assert any("dtypes changed" in n for n in notes)
 
 
+# ----------------------------------------------------------- chaos counters
+def test_chaos_counters_must_be_zero_in_no_fault_config():
+    """Serving rows carry expired/shed counts from the no-fault benchmark
+    configuration; any nonzero value is an admission-layer bug and fails
+    exactly (no tolerance)."""
+    base = _index([dict(_row("s"), expired=0, shed=0)])
+    clean = _index([dict(_row("s"), expired=0, shed=0)])
+    assert compare_rows(base, clean, 0.2, 0)[0] == []
+    for key in ("expired", "shed"):
+        row = dict(_row("s"), expired=0, shed=0)
+        row[key] = 1
+        failures, _ = compare_rows(base, _index([row]), 0.2, 0)
+        assert len(failures) == 1
+        assert f"{key}=1" in failures[0] and "exactly 0" in failures[0]
+
+
+def test_chaos_counter_lost_fails():
+    """A fresh row that drops its expired/shed count silently disarms the
+    chaos gate — that is a failure, like losing a byte figure."""
+    base = _index([dict(_row("s"), expired=0, shed=0)])
+    lost = _index([_row("s")])
+    failures, _ = compare_rows(base, lost, 0.2, 0)
+    assert len(failures) == 2
+    assert any("expired count lost" in f for f in failures)
+    assert any("shed count lost" in f for f in failures)
+    # rows that never carried counters stay ungated
+    plain = _index([_row("p")])
+    assert compare_rows(plain, dict(plain), 0.2, 0)[0] == []
+
+
+def test_chaos_counter_nonzero_fails_even_without_baseline_counter():
+    """The zero requirement is absolute: a NEW nonzero counter on a row
+    whose baseline never had one still fails (faults leaking into a
+    benchmark must never pass because the baseline predates the gate)."""
+    base = _index([_row("s")])
+    dirty = _index([dict(_row("s"), shed=3)])
+    failures, _ = compare_rows(base, dirty, 0.2, 0)
+    assert len(failures) == 1 and "shed=3" in failures[0]
+
+
+def test_committed_serving_rows_carry_zero_chaos_counters():
+    """The committed baseline's serving rows must participate in the
+    chaos gate (counters present and zero)."""
+    rows, _ = load_rows(str(BASELINE))
+    serving = [r for n, r in rows.items()
+               if n.startswith("serving.") and "requests_per_s" in r]
+    assert serving
+    for r in serving:
+        assert r["expired"] == 0 and r["shed"] == 0
+
+
+# ----------------------------------------------------- corrupt input files
+def test_load_rows_missing_file_one_line_diagnosis(tmp_path):
+    with pytest.raises(SystemExit, match="cannot read file") as ei:
+        load_rows(str(tmp_path / "nope.json"))
+    assert "nope.json" in str(ei.value)
+
+
+def test_load_rows_truncated_json_names_file_and_position(tmp_path):
+    p = tmp_path / "trunc.json"
+    p.write_text('{"rows": [{"name": "a", "us_per_call": 1')
+    with pytest.raises(SystemExit, match="corrupt/truncated JSON") as ei:
+        load_rows(str(p))
+    msg = str(ei.value)
+    assert "trunc.json" in msg and "line 1" in msg
+
+
+def test_load_rows_missing_rows_key(tmp_path):
+    p = tmp_path / "norows.json"
+    p.write_text('{"results": []}')
+    with pytest.raises(SystemExit, match="missing key 'rows'") as ei:
+        load_rows(str(p))
+    assert "norows.json" in str(ei.value)
+
+
+def test_load_rows_non_dict_payload(tmp_path):
+    p = tmp_path / "list.json"
+    p.write_text('[1, 2, 3]')
+    with pytest.raises(SystemExit, match="missing key 'rows'"):
+        load_rows(str(p))
+
+
+def test_load_rows_rows_not_a_list(tmp_path):
+    p = tmp_path / "badrows.json"
+    p.write_text('{"rows": {"a": 1}}')
+    with pytest.raises(SystemExit,
+                       match="key 'rows' is dict, expected a list"):
+        load_rows(str(p))
+
+
+def test_load_rows_row_missing_name_names_index(tmp_path):
+    p = tmp_path / "noname.json"
+    p.write_text('{"rows": [{"name": "ok"}, {"us_per_call": 5}]}')
+    with pytest.raises(SystemExit, match=r"rows\[1\] missing key 'name'"):
+        load_rows(str(p))
+
+
 # ------------------------------------------------------------- Pareto gate
 FRONT = [[0, 32768], [1024, 31744], [4864, 26368]]
 

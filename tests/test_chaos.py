@@ -1,0 +1,430 @@
+"""Chaos suite for the failure layer (DESIGN.md §12): every injected
+fault must end as a retry-success, a typed error result, or a recorded
+degradation — never a hang and never a silent wrong answer.
+
+Everything here is deterministic: faults come from a seeded ``FaultPlan``
+(same seed → same fault sequence, see serving/faults.py), clocks are
+injectable fakes where timing matters, and "no silent wrong answer" is
+checked by comparing every successful output bit-for-bit against a
+fault-free ``Deployment.run`` of the same request.
+"""
+import numpy as np
+import pytest
+
+import repro.deploy as deploy
+from repro.core.graph import Graph
+from repro.errors import (DeviceInitError, DispatchFailedError,
+                          GuardViolation, NaNActivationError)
+from repro.graphs import figure1_int8_graph, random_input
+from repro.graphs.cnn_ops import CNNBuilder
+from repro.mcu.compile import CANARY_BYTE
+from repro.serving import (FaultInjector, FaultPlan, GraphServingEngine,
+                           RequestError, ShardedServingEngine)
+
+
+def _tiny_cnn() -> Graph:
+    g = Graph()
+    b = CNNBuilder(g)
+    x = b.input("input", 12, 12, 3)
+    x = b.conv(x, 6, k=3)
+    y = b.maxpool(x, k=2, stride=2)
+    y = b.fc(y, 4)
+    g.set_outputs([y])
+    return g
+
+
+class FakeClock:
+    """Injectable clock: time moves only when the test says so."""
+
+    def __init__(self, t: float = 0.0) -> None:
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def d_int8():
+    return deploy.build(figure1_int8_graph())
+
+
+@pytest.fixture(scope="module")
+def d_float():
+    return deploy.build(_tiny_cnn())
+
+
+@pytest.fixture(scope="module")
+def d_float_guarded():
+    return deploy.build(_tiny_cnn(), guard_bytes=32)
+
+
+def _reqs(g, n, seed0=0):
+    return [random_input(g, seed=seed0 + i) for i in range(n)]
+
+
+def _assert_ok_lanes_bit_identical(d, reqs, results):
+    """Every non-error result must equal the fault-free reference exactly
+    — the 'no silent wrong answer' half of the chaos invariant."""
+    for r, out in zip(reqs, results):
+        if isinstance(out, RequestError):
+            continue
+        ref = d.run(r)
+        for name in d.exec_graph.outputs:
+            np.testing.assert_array_equal(ref[name], out[name])
+
+
+# ----------------------------------------------------------- no-fault base
+def test_no_fault_config_is_byte_identical_and_counts_zero(d_int8):
+    """The CI chaos gate's premise: with no faults and no guards the
+    engine is the pre-failure-layer engine — outputs bit-identical to
+    one-shot runs, every robustness counter exactly zero."""
+    g = d_int8.exec_graph
+    reqs = _reqs(g, 5, seed0=31)
+    eng = ShardedServingEngine(d_int8, replicas=1, lanes=2)
+    outs = eng.serve(reqs)
+    _assert_ok_lanes_bit_identical(d_int8, reqs, outs)
+    s = eng.stats
+    assert s.admitted == 5
+    assert (s.expired, s.shed, s.retried, s.failed,
+            s.watchdog_trips) == (0, 0, 0, 0, 0)
+    assert s.degraded is None
+    j = s.as_json()
+    # measured-zero contract: the counters must be PRESENT as 0 in the
+    # payload (bench rows feed the compare.py zero gate from these)
+    for k in ("expired", "shed", "retried", "failed"):
+        assert j[k] == 0
+
+
+# ------------------------------------------------------------- chaos sweep
+def test_chaos_sweep_every_fault_accounted():
+    """The headline invariant: a seeded sweep mixing device errors,
+    arena corruption and NaN poisoning, with the injector's ledger
+    balanced exactly against retries + typed failures."""
+    d = deploy.build(_tiny_cnn(), guard_bytes=32)
+    g = d.exec_graph
+    inj = FaultInjector(FaultPlan(seed=42, device_error_rate=0.15,
+                                  corrupt_rate=0.25, nan_rate=0.25))
+    eng = ShardedServingEngine(d, replicas=1, lanes=2, max_retries=2,
+                               faults=inj)
+    reqs = _reqs(g, 12, seed0=7)
+    rids = [eng.submit(r) for r in reqs]
+    done = eng.drain()
+    results = [done[rid] for rid in rids]
+    s = eng.stats
+
+    # 1. liveness: every request has exactly one result, typed or ok
+    assert len(results) == 12
+    codes = [r.code if isinstance(r, RequestError) else "ok"
+             for r in results]
+    assert set(codes) <= {"ok", "corrupted", "nan_output",
+                          "dispatch_failed"}
+
+    # 2. no silent wrong answer
+    _assert_ok_lanes_bit_identical(d, reqs, results)
+
+    # 3. the sweep actually exercised every fault kind (seed-pinned)
+    led = inj.injected
+    assert led["device_error"] > 0 and led["corrupt"] > 0 \
+        and led["nan"] > 0
+
+    # 4. ledger balance: each device error consumed one retry (none
+    #    exhausted the dispatch budget here), each poisoned lane either
+    #    re-queued (a retry) or ended as a typed failure
+    poison_failed = sum(1 for c in codes if c in ("corrupted",
+                                                  "nan_output"))
+    dispatch_failed = sum(1 for c in codes if c == "dispatch_failed")
+    assert dispatch_failed == 0        # seed-pinned: budget never spent
+    assert s.retried == led["device_error"] + \
+        (led["corrupt"] + led["nan"] - poison_failed)
+    assert s.failed == poison_failed
+
+
+# -------------------------------------------------------------- guard bytes
+def test_guard_build_bit_identical_and_regions_planned(d_float,
+                                                       d_float_guarded):
+    """guard_bytes=N must not change a single output byte — only add
+    canary-filled never-placed regions to the arena."""
+    g = d_float.exec_graph
+    assert d_float.executor.guard_regions == ()
+    assert d_float.guard_bytes == 0
+    regions = d_float_guarded.executor.guard_regions
+    assert regions and d_float_guarded.guard_bytes == 32
+    assert d_float_guarded.arena_bytes >= d_float.arena_bytes
+    for seed in range(3):
+        x = random_input(g, seed=seed)
+        ref, out = d_float.run(x), d_float_guarded.run(x)
+        for name in g.outputs:
+            np.testing.assert_array_equal(ref[name], out[name])
+
+
+def test_guard_regions_are_complement_of_placements(d_float_guarded):
+    """Soundness: guard regions never overlap any tensor placement, so a
+    canary can only be stomped by an out-of-bounds write."""
+    plan = d_float_guarded.plan
+    spans = sorted((p.offset, p.offset + p.size) for p in plan.placements)
+    for off, size in plan.guard_regions():
+        for lo, hi in spans:
+            assert off + size <= lo or off >= hi, \
+                f"guard [{off},{off + size}) overlaps placement [{lo},{hi})"
+
+
+def test_guard_canary_detects_stomp(d_float_guarded):
+    """A byte flipped inside a guard region raises GuardViolation naming
+    the offset; an untouched arena verifies clean."""
+    ex = d_float_guarded.executor
+    x = random_input(d_float_guarded.exec_graph, seed=3)
+    arena = np.array(ex.fn(ex.make_arena(x)))
+    ex.verify_guards(arena)                     # clean run passes
+    off, size = ex.guard_regions[0]
+    assert int(arena[off]) == CANARY_BYTE
+    arena[off] ^= 0xFF
+    with pytest.raises(GuardViolation, match=str(off)):
+        ex.verify_guards(arena)
+
+
+def test_guarded_golden_graph_serving(d_int8):
+    """Guard-byte serving on the golden int8 graph: canaries verified
+    every dispatch, outputs still bit-identical to the unguarded build."""
+    dg = deploy.build(figure1_int8_graph(), guard_bytes=16)
+    assert dg.executor.guard_regions
+    g = dg.exec_graph
+    reqs = _reqs(g, 4, seed0=50)
+    outs = ShardedServingEngine(dg, replicas=1, lanes=2).serve(reqs)
+    _assert_ok_lanes_bit_identical(d_int8, reqs, outs)
+
+
+def test_guard_corruption_detected_by_genuine_canary_check():
+    """With guards planned, injected corruption lands in a guard region
+    and is caught by verify_guards itself — retries first, then typed."""
+    d = deploy.build(_tiny_cnn(), guard_bytes=32)
+    eng = ShardedServingEngine(
+        d, replicas=1, lanes=2, max_retries=0,
+        faults=FaultPlan(seed=9, corrupt_rate=1.0))
+    reqs = _reqs(d.exec_graph, 2, seed0=70)
+    outs = eng.serve(reqs)
+    assert all(isinstance(o, RequestError) and o.code == "corrupted"
+               for o in outs)
+    assert eng.stats.failed == 2 and eng.stats.retried == 0
+
+
+def test_guardless_corruption_surfaces_as_ecc_signal(d_int8):
+    """Without guards the injector's lane report stands in for the
+    hardware ECC/bus-fault line: corruption still becomes a typed error,
+    never a silently wrong answer."""
+    eng = ShardedServingEngine(d_int8, replicas=1, lanes=2, max_retries=0,
+                               faults=FaultPlan(seed=4, corrupt_rate=1.0))
+    outs = eng.serve(_reqs(d_int8.exec_graph, 2, seed0=80))
+    assert all(isinstance(o, RequestError) and o.code == "corrupted"
+               for o in outs)
+
+
+def test_nan_poison_detected_by_output_scan(d_float):
+    """NaN injection on a float output is caught by the genuine
+    np.isnan scan; with retries available the request eventually
+    succeeds bit-identically (the fault is per-dispatch, not sticky)."""
+    eng = ShardedServingEngine(d_float, replicas=1, lanes=2, max_retries=0,
+                               faults=FaultPlan(seed=2, nan_rate=1.0))
+    reqs = _reqs(d_float.exec_graph, 2, seed0=90)
+    outs = eng.serve(reqs)
+    assert all(isinstance(o, RequestError) and o.code == "nan_output"
+               for o in outs)
+
+
+# -------------------------------------------------------- retry / watchdog
+def test_transient_device_errors_retried_to_success(d_int8):
+    eng = ShardedServingEngine(
+        d_int8, replicas=1, lanes=2, max_retries=3,
+        faults=FaultPlan(seed=11, device_error_rate=0.3))
+    reqs = _reqs(d_int8.exec_graph, 8, seed0=100)
+    outs = eng.serve(reqs)
+    _assert_ok_lanes_bit_identical(d_int8, reqs, outs)
+    assert not any(isinstance(o, RequestError) for o in outs)
+    s = eng.stats
+    assert s.retried > 0 and s.failed == 0
+
+
+def test_persistent_device_error_becomes_typed_failure(d_int8):
+    """rate=1.0: every attempt raises, the budget exhausts, every admitted
+    request gets a typed dispatch_failed — the engine never hangs or
+    returns garbage."""
+    eng = ShardedServingEngine(
+        d_int8, replicas=1, lanes=2, max_retries=1,
+        faults=FaultPlan(seed=5, device_error_rate=1.0))
+    outs = eng.serve(_reqs(d_int8.exec_graph, 2, seed0=110))
+    assert all(isinstance(o, RequestError) and o.code == "dispatch_failed"
+               for o in outs)
+    s = eng.stats
+    assert s.failed == 2 and s.retried == 2   # 2 failed attempts counted
+
+
+def test_watchdog_converts_slow_device_to_typed_failure(d_int8):
+    """A persistently slow dispatch trips the post-hoc watchdog: the late
+    result is discarded, the retry budget spends, the failure is typed —
+    bounded tail latency instead of an unbounded stall."""
+    eng = ShardedServingEngine(
+        d_int8, replicas=1, lanes=2, max_retries=1, dispatch_timeout=0.005,
+        faults=FaultPlan(seed=6, slow_rate=1.0, slow_s=0.03))
+    outs = eng.serve(_reqs(d_int8.exec_graph, 2, seed0=120))
+    assert all(isinstance(o, RequestError) and o.code == "dispatch_failed"
+               for o in outs)
+    s = eng.stats
+    assert s.watchdog_trips == 2 and s.failed == 2
+
+
+# ------------------------------------------------- deadlines and shedding
+def test_deadline_expiry_fake_clock_never_executes(d_int8):
+    """Requests whose deadline passes before admission are expired typed
+    — and provably never executed (no dispatch happens when everything
+    queued is stale)."""
+    clk = FakeClock(0.0)
+    eng = ShardedServingEngine(d_int8, replicas=1, lanes=2, clock=clk)
+    g = d_int8.exec_graph
+    stale = [eng.submit(random_input(g, seed=i), deadline=1.0)
+             for i in range(2)]
+    fresh = eng.submit(random_input(g, seed=9), deadline=100.0)
+    clk.t = 5.0                                # both stale deadlines pass
+    eng.step()
+    for rid in stale:
+        err = eng.take(rid)
+        assert isinstance(err, RequestError) and err.code == "expired"
+        assert "deadline" in err.detail
+    done = eng.drain()
+    assert not isinstance(done[fresh], RequestError)
+    s = eng.stats
+    assert s.expired == 2 and s.admitted == 1 and s.dispatches == 1
+
+
+def test_all_expired_step_dispatches_nothing(d_int8):
+    clk = FakeClock(0.0)
+    eng = ShardedServingEngine(d_int8, replicas=1, lanes=2, clock=clk)
+    rid = eng.submit(random_input(d_int8.exec_graph, seed=1), deadline=0.5)
+    clk.t = 2.0
+    assert eng.step() == 0
+    assert isinstance(eng.take(rid), RequestError)
+    eng.drain()
+    assert eng.stats.dispatches == 0 and eng.stats.expired == 1
+
+
+def test_shedding_beyond_max_pending_exact(d_int8):
+    """Submissions over max_pending get an immediate typed shed result;
+    the count is exact and admitted requests are unaffected."""
+    eng = ShardedServingEngine(d_int8, replicas=1, lanes=2, max_pending=2)
+    g = d_int8.exec_graph
+    reqs = _reqs(g, 4, seed0=130)
+    rids = [eng.submit(r) for r in reqs]
+    shed = [eng.take(rid) for rid in rids[2:]]   # shed: result is immediate
+    assert all(isinstance(e, RequestError) and e.code == "shed"
+               for e in shed)
+    done = eng.drain()
+    _assert_ok_lanes_bit_identical(d_int8, reqs[:2],
+                                   [done[r] for r in rids[:2]])
+    s = eng.stats
+    assert s.shed == 2 and s.admitted == 2 and s.failed == 0
+
+
+def test_priority_orders_admission_within_capacity(d_int8):
+    """With capacity 2 and 4 queued, the high-priority pair rides the
+    first dispatch regardless of arrival order."""
+    clk = FakeClock(0.0)
+    eng = ShardedServingEngine(d_int8, replicas=1, lanes=2, clock=clk)
+    g = d_int8.exec_graph
+    low = [eng.submit(random_input(g, seed=1)),
+           eng.submit(random_input(g, seed=2))]
+    high = [eng.submit(random_input(g, seed=3), priority=5),
+            eng.submit(random_input(g, seed=4), priority=5)]
+    eng.step()
+    for rid in high:
+        assert rid in eng._results and not isinstance(
+            eng._results[rid], RequestError)
+    for rid in low:
+        assert rid not in eng._results
+    eng.drain()
+
+
+# ------------------------------------------------------------- degradation
+def test_engine_init_failure_degrades_to_single_device(d_int8):
+    """An injected replica-mesh init failure falls back to single-device
+    serving: a recorded degradation, and outputs still bit-identical."""
+    eng = ShardedServingEngine(d_int8, replicas=1, lanes=2,
+                               faults=FaultPlan(fail_engine_init=True))
+    reqs = _reqs(d_int8.exec_graph, 3, seed0=140)
+    outs = eng.serve(reqs)
+    _assert_ok_lanes_bit_identical(d_int8, reqs, outs)
+    s = eng.stats
+    assert s.degraded and any("falling back to single-device" in n
+                              for n in s.degraded)
+
+
+def test_engine_init_failure_strict_raises(d_int8):
+    with pytest.raises(DeviceInitError):
+        ShardedServingEngine(d_int8, replicas=1, lanes=2,
+                             fallback_single_device=False,
+                             faults=FaultPlan(fail_engine_init=True))
+
+
+def test_build_nonstrict_budget_miss_degrades():
+    """deploy.build(strict=False) records an impossible budget as a
+    degradation note instead of raising; strict raises typed."""
+    from repro.errors import BudgetUnreachableError
+    g = figure1_int8_graph()
+    with pytest.raises(BudgetUnreachableError, match="strict=False"):
+        deploy.build(g, arena_budget=1)
+    d = deploy.build(g, arena_budget=1, strict=False)
+    assert d.degraded and any("arena budget missed" in n
+                              for n in d.degraded)
+    # degradation propagates into the engine's stats
+    eng = ShardedServingEngine(d, replicas=1, lanes=2)
+    eng.serve(_reqs(d.exec_graph, 1, seed0=150))
+    assert any("arena budget missed" in n for n in eng.stats.degraded)
+
+
+# --------------------------------------------------- Deployment.run hooks
+def test_deployment_run_guard_violation():
+    d = deploy.build(_tiny_cnn(), guard_bytes=32)
+    x = random_input(d.exec_graph, seed=1)
+    with pytest.raises(GuardViolation, match="arena byte"):
+        d.run(x, faults=FaultPlan(seed=1, corrupt_rate=1.0))
+    # same deployment, faults off: unaffected
+    d.run(x)
+
+
+def test_deployment_run_nan_detection(d_float):
+    x = random_input(d_float.exec_graph, seed=2)
+    with pytest.raises(NaNActivationError, match="NaN"):
+        d_float.run(x, faults=FaultPlan(seed=2, nan_rate=1.0))
+
+
+def test_deployment_run_retries_then_fails_typed(d_int8):
+    x = random_input(d_int8.exec_graph, seed=3)
+    # transient errors below the retry budget: answer is bit-identical
+    ref = d_int8.run(x)
+    out = d_int8.run(x, faults=FaultPlan(seed=8, device_error_rate=0.3))
+    for name in d_int8.exec_graph.outputs:
+        np.testing.assert_array_equal(ref[name], out[name])
+    # persistent errors: typed failure, not a hang
+    with pytest.raises(DispatchFailedError):
+        d_int8.run(x, faults=FaultPlan(seed=8, device_error_rate=1.0))
+
+
+# ---------------------------------------------- GraphServingEngine parity
+def test_graph_engine_retries_and_guards(d_int8):
+    """The micro-batching engine shares the same retry/guard layer."""
+    g = d_int8.exec_graph
+    reqs = _reqs(g, 6, seed0=160)
+    eng = GraphServingEngine(
+        deployment=d_int8, micro_batch=2,
+        faults=FaultPlan(seed=3, device_error_rate=0.5), max_retries=4)
+    outs = eng.serve(reqs)
+    for r, o in zip(reqs, outs):
+        ref = d_int8.run(r)
+        for name in g.outputs:
+            np.testing.assert_array_equal(ref[name], o[name])
+    assert eng.stats.retried > 0 and eng.stats.admitted == 6
+
+    dg = deploy.build(figure1_int8_graph(), guard_bytes=16)
+    eng2 = GraphServingEngine(deployment=dg, micro_batch=2)
+    outs2 = eng2.serve(reqs)
+    for r, o in zip(reqs, outs2):
+        ref = d_int8.run(r)
+        for name in g.outputs:
+            np.testing.assert_array_equal(ref[name], o[name])

@@ -1,0 +1,197 @@
+"""Regression tests for ``Deployment.validate_inputs`` — one per
+rejection.  The executor's own ``make_arena`` checks silently cast
+float64 → float32 (jnp.asarray does it before the dtype check fires) and
+silently accept any wrong shape with the right flat element count; on an
+MCU deployment both are wrong-answer factories, so the facade rejects
+them with a typed ``InputValidationError`` before the arena is touched.
+Also covers the strict/non-strict build ladder and rungs validation.
+"""
+import numpy as np
+import pytest
+
+import repro.deploy as deploy
+from repro.core import schedule
+from repro.core.graph import Graph
+from repro.errors import (BudgetUnreachableError, InputValidationError,
+                          ReproError)
+from repro.graphs import figure1_int8_graph, random_input
+from repro.graphs.cnn_ops import CNNBuilder
+
+
+def _float_cnn() -> Graph:
+    g = Graph()
+    b = CNNBuilder(g)
+    x = b.input("input", 8, 8, 3)
+    x = b.conv(x, 4, k=3)
+    y = b.fc(x, 4)
+    g.set_outputs([y])
+    return g
+
+
+@pytest.fixture(scope="module")
+def d_float():
+    return deploy.build(_float_cnn())
+
+
+@pytest.fixture(scope="module")
+def d_int8():
+    return deploy.build(figure1_int8_graph())
+
+
+def _good(d, seed=0):
+    return random_input(d.exec_graph, seed=seed)
+
+
+# ------------------------------------------------------------- rejections
+def test_non_dict_inputs_rejected(d_float):
+    with pytest.raises(InputValidationError, match="must be a dict"):
+        d_float.run([1, 2, 3])
+
+
+def test_missing_input_rejected(d_float):
+    with pytest.raises(InputValidationError, match="missing graph inputs"):
+        d_float.run({})
+
+
+def test_unknown_tensor_rejected_with_hint(d_float):
+    x = _good(d_float)
+    x["not_a_tensor"] = np.zeros(1, np.float32)
+    with pytest.raises(InputValidationError,
+                       match="unknown input tensor 'not_a_tensor'"):
+        d_float.run(x)
+
+
+def test_produced_tensor_rejected(d_float):
+    """Feeding an operator's output as an input must be refused — the
+    arena program would just overwrite it, silently ignoring the value."""
+    x = _good(d_float)
+    produced = d_float.exec_graph.outputs[0]
+    x[produced] = np.zeros(1, np.float32)
+    with pytest.raises(InputValidationError, match="is produced by"):
+        d_float.run(x)
+
+
+def test_float64_silent_cast_rejected(d_float):
+    """THE regression this layer exists for: jnp.asarray silently
+    downcasts float64 → float32, so the old path accepted doubles and
+    quietly served answers computed on truncated values."""
+    x = _good(d_float)
+    name = next(iter(x))
+    x[name] = np.asarray(x[name], np.float64)
+    with pytest.raises(InputValidationError,
+                       match="float64.*declares float32"):
+        d_float.run(x)
+
+
+def test_int_input_on_float_graph_rejected(d_float):
+    x = _good(d_float)
+    name = next(iter(x))
+    x[name] = np.zeros(np.asarray(x[name]).shape, np.int32)
+    with pytest.raises(InputValidationError, match="int32"):
+        d_float.run(x)
+
+
+def test_float_input_on_int8_graph_names_quantize_hint(d_int8):
+    """An un-quantized float fed to an int8 graph gets the actionable
+    hint (quantize_inputs), not just a dtype mismatch."""
+    x = _good(d_int8)
+    name = next(iter(x))
+    x[name] = np.asarray(x[name], np.float32)
+    with pytest.raises(InputValidationError, match="quantize_inputs"):
+        d_int8.run(x)
+
+
+def test_wrong_shape_same_elements_rejected(d_float):
+    """The silent-flatten regression: right element count, wrong shape
+    used to be accepted and reshaped (transposing the layout wholesale)."""
+    x = _good(d_float)
+    name, val = next(iter(x.items()))
+    val = np.asarray(val)
+    if val.ndim < 2:
+        pytest.skip("needs a multi-dim input")
+    x[name] = np.ascontiguousarray(val.reshape(-1))
+    with pytest.raises(InputValidationError,
+                       match="refusing the silent flatten"):
+        d_float.run(x)
+
+
+def test_wrong_element_count_rejected(d_float):
+    x = _good(d_float)
+    name = next(iter(x))
+    x[name] = np.zeros(3, np.float32)
+    with pytest.raises(InputValidationError, match="elements"):
+        d_float.run(x)
+
+
+def test_non_finite_floats_rejected(d_float):
+    for poison in (np.nan, np.inf, -np.inf):
+        x = _good(d_float)
+        name, val = next(iter(x.items()))
+        val = np.array(val)
+        val.flat[0] = poison
+        x[name] = val
+        with pytest.raises(InputValidationError, match="non-finite"):
+            d_float.run(x)
+
+
+def test_typed_error_is_catchable_as_repro_and_value_error(d_float):
+    """InputValidationError subclasses both ReproError (library-wide
+    catch) and ValueError (legacy callers)."""
+    with pytest.raises(ReproError):
+        d_float.run({})
+    with pytest.raises(ValueError):
+        d_float.run({})
+
+
+def test_validate_false_escape_hatch(d_float):
+    """validate=False restores the raw executor path (trusted inner-loop
+    callers); good inputs produce identical outputs either way."""
+    x = _good(d_float, seed=5)
+    ref = d_float.run(x)
+    out = d_float.run(x, validate=False)
+    for name in d_float.exec_graph.outputs:
+        np.testing.assert_array_equal(ref[name], out[name])
+
+
+def test_good_inputs_pass_unchanged(d_float, d_int8):
+    for d in (d_float, d_int8):
+        d.validate_inputs(_good(d, seed=7))     # no raise
+
+
+# ------------------------------------------------------ build strictness
+def test_strict_budget_miss_raises_typed():
+    with pytest.raises(BudgetUnreachableError, match="arena budget missed"):
+        deploy.build(figure1_int8_graph(), arena_budget=1)
+
+
+def test_nonstrict_budget_miss_records_degraded():
+    d = deploy.build(figure1_int8_graph(), arena_budget=1, strict=False)
+    assert any("arena budget missed" in n for n in d.degraded)
+    # the deployment still serves correctly (best effort, not broken)
+    x = _good(d)
+    ref = deploy.build(figure1_int8_graph()).run(x)
+    out = d.run(x)
+    for name in d.exec_graph.outputs:
+        np.testing.assert_array_equal(ref[name], out[name])
+
+
+def test_strict_build_no_degradation_notes():
+    d = deploy.build(figure1_int8_graph())
+    assert d.degraded == []
+
+
+def test_schedule_rejects_unknown_rung():
+    with pytest.raises(ValueError, match="unknown scheduler rungs"):
+        schedule(figure1_int8_graph(), rungs=("reorder", "warp_drive"))
+
+
+def test_schedule_requires_reorder_rung():
+    with pytest.raises(ValueError, match="reorder"):
+        schedule(figure1_int8_graph(), rungs=("pex",))
+
+
+def test_reorder_only_rungs_matches_full_ladder_on_small_graph():
+    """figure1 needs no rewrites, so gating the ladder down to plain
+    reordering must reproduce the full ladder's peak exactly."""
+    g = figure1_int8_graph()
+    assert schedule(g, rungs=("reorder",)).peak == schedule(g).peak
